@@ -1,0 +1,90 @@
+"""Ablations over the serving optimizations the stage engines inherit
+(paper §2.2/§3.3): continuous-batching degree and chunked prefill.
+
+  - batching sweep: throughput of one AR stage at max_batch 1/2/4/8;
+  - chunked prefill: short-request JCT when a long prompt shares the
+    engine, with small chunks (decodes interleave) vs monolithic prefill.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.pipelines import tiny_lm, _kv
+from repro.engine.ar_engine import AREngine
+from repro.engine.sampling import SamplingParams
+from repro.models import transformer as T
+
+
+def _drain(eng, n_expected):
+    done = {}
+    t0 = time.perf_counter()
+    for _ in range(100_000):
+        for ev in eng.step():
+            if ev.kind == "finished":
+                done[ev.req_id] = time.perf_counter() - t0
+        if not eng.has_work:
+            break
+    return done
+
+
+def run(n_requests: int = 12, max_new: int = 16, seed: int = 0) -> list:
+    cfg = tiny_lm("abl", vocab=256)
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 256, size=12).astype(np.int32)
+               for _ in range(n_requests)]
+    rows = []
+
+    # ---- continuous-batching degree ------------------------------------
+    base_tps = None
+    for mb in (1, 2, 4, 8):
+        eng = AREngine("abl", cfg, params, kv=_kv(mb), max_batch=mb,
+                       default_sampling=SamplingParams(
+                           max_new_tokens=max_new, temperature=0.0))
+        # warm
+        eng.enqueue(-1, {"tokens": prompts[0]}, SamplingParams(), {})
+        _drain(eng, 1)
+        t0 = time.perf_counter()
+        for i, p in enumerate(prompts):
+            eng.enqueue(i, {"tokens": p}, SamplingParams(), {})
+        _drain(eng, n_requests)
+        wall = time.perf_counter() - t0
+        tps = n_requests * max_new / wall
+        base_tps = base_tps or tps
+        rows.append((f"ablation_batch{mb}_tps", 1e6 / tps,
+                     f"tokens/s={tps:.1f} vs_mb1={tps/base_tps:.2f}x"))
+
+    # ---- chunked prefill -------------------------------------------------
+    long_prompt = rng.integers(0, 256, size=192).astype(np.int32)
+    res = {}
+    for label, chunk, budget in (("chunked", 32, 40),
+                                 ("monolithic", 192, 256)):
+        eng = AREngine("abl2", cfg, params, kv=_kv(4, max_seq=256),
+                       max_batch=4, token_budget=budget, chunk_size=chunk,
+                       default_sampling=SamplingParams(
+                           max_new_tokens=max_new, temperature=0.0))
+        eng.enqueue(-1, {"tokens": prompts[0]}, SamplingParams(), {})
+        _drain(eng, 1)
+        # short request is already decoding when the long prompt arrives
+        eng.enqueue(100, {"tokens": prompts[0]}, SamplingParams(), {})
+        eng.step()
+        eng.enqueue(101, {"tokens": long_prompt}, SamplingParams(), {})
+        done = _drain(eng, 2)
+        res[label] = done[100]
+    rows.append(("ablation_chunked_prefill_short_jct",
+                 res["chunked"] * 1e6,
+                 f"chunked={res['chunked']*1e3:.1f}ms "
+                 f"monolithic={res['monolithic']*1e3:.1f}ms "
+                 f"(CPU prefill is ~ms-fast so stall protection is not "
+                 f"visible here; the mechanism is exercised functionally — "
+                 f"decodes interleave with prefill chunks under one token "
+                 f"budget, scheduler-tested)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

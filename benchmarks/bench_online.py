@@ -1,0 +1,58 @@
+"""Online serving: Poisson arrivals against the Thinker-Talker-Vocoder
+pipeline — JCT/TTFT percentiles under load (the online complement of the
+paper's offline §4.2 evaluation)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import prompts, warmup
+from repro.configs.pipelines import build_qwen_omni
+from repro.core.metrics import summarize
+from repro.core.orchestrator import Orchestrator
+from repro.core.request import Request
+
+
+def run(n_requests: int = 10, rate_hz: float = 4.0, seed: int = 0) -> list:
+    graph, engines, _ = build_qwen_omni(
+        max_batch=4, thinker_tokens=6, talker_tokens=24, stream_chunk=8,
+        dit_steps=2, seed=seed)
+    orch = Orchestrator(graph, engines)
+    warmup(orch, [{"tokens": p} for p in prompts(2, seed=42)])
+
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_hz, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    ps = prompts(n_requests, seed=seed)
+
+    t0 = time.perf_counter()
+    reqs = []
+    i = 0
+    while len(orch.completed) < n_requests:
+        now = time.perf_counter() - t0
+        while i < n_requests and arrivals[i] <= now:
+            r = Request(inputs={"tokens": ps[i]})
+            reqs.append(r)
+            orch.submit(r)
+            i += 1
+        if not orch.tick() and i >= n_requests and not any(
+                engines[n].has_work for n in graph.stages):
+            break
+        if time.perf_counter() - t0 > 120:
+            break
+    wall = time.perf_counter() - t0
+    m = summarize(reqs, wall_time=wall)
+    return [
+        ("online_jct", m["jct_mean"] * 1e6,
+         f"p50={m['jct_p50']:.3f}s p95={m['jct_p95']:.3f}s "
+         f"rate={rate_hz}req/s served={m['req_per_s']:.2f}req/s"),
+        ("online_ttft", m["ttft_p50"] * 1e6,
+         f"p50={m['ttft_p50']:.3f}s p95={m['ttft_p95']:.3f}s "
+         f"(streaming vocoder output)"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,39 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.orchestrator import Orchestrator
+from repro.core.request import Request
+
+FRAME_SECONDS = 0.02          # one vocoder latent frame = 20 ms of audio
+
+
+def prompts(n: int, lo=8, hi=24, vocab=500, seed=0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=int(rng.integers(lo, hi))
+                         ).astype(np.int32) for _ in range(n)]
+
+
+def run_batch(orch: Orchestrator, inputs_list) -> List[Request]:
+    """Submit a batch at t=0 and run to completion (offline inference)."""
+    reqs = [Request(inputs=i) for i in inputs_list]
+    for r in reqs:
+        orch.submit(r)
+    orch.run()
+    return reqs
+
+
+def warmup(orch: Orchestrator, inputs_list) -> None:
+    run_batch(orch, inputs_list)
+
+
+def audio_seconds(n_frames: int) -> float:
+    return n_frames * FRAME_SECONDS
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,127 @@
+"""Analytic FLOPs / HBM-traffic model per (arch, shape).
+
+Why analytic: XLA's ``compiled.cost_analysis()`` on CPU counts while-loop
+bodies ONCE (verified empirically — a scan of 8 matmuls reports the flops
+of 1), so any scan-over-layers or scan-over-sequence model is undercounted
+by orders of magnitude. Roofline compute/memory terms therefore come from
+the standard analytic accounting below (the same math MFU reports use);
+the HLO is still the source of truth for the collective term (with
+loop-trip correction) and for memory_analysis bytes.
+
+All quantities are GLOBAL (whole job); the roofline divides by chip count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.mamba import dt_rank, n_heads2
+
+
+@dataclass
+class CostEstimate:
+    flops: float              # executed flops (incl. remat & MoE capacity)
+    model_flops: float        # "useful" flops: 6ND / 2ND with N_active
+    hbm_bytes: float          # global HBM traffic per step
+    notes: str = ""
+
+
+def _attn_layer_flops(cfg: ModelConfig, T: float, ctx: float) -> float:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    proj = 2 * T * d * (nq + 2 * nkv) * hd + 2 * T * nq * hd * d
+    attn = 2 * T * ctx * nq * hd * 2          # QK^T and PV
+    return proj + attn
+
+
+def _mlp_layer_flops(cfg: ModelConfig, T: float, capacity_overhead=1.0):
+    if cfg.is_moe:
+        return 6 * T * cfg.experts_per_token * cfg.d_model * cfg.d_ff \
+            * capacity_overhead + 2 * T * cfg.d_model * cfg.num_experts
+    return 6 * T * cfg.d_model * cfg.d_ff
+
+
+def _mamba_layer_flops(cfg: ModelConfig, T: float) -> float:
+    d, di, n, cw = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    if cfg.ssm_version == 1:
+        r = dt_rank(cfg)
+        return (2 * T * d * 2 * di + 2 * T * cw * di
+                + 2 * T * di * (r + 2 * n) + 2 * T * r * di
+                + T * di * n * 6                 # dA, h update, y contraction
+                + 2 * T * di * d)
+    nh = n_heads2(cfg)
+    return (2 * T * d * (2 * di + 2 * n + nh) + 2 * T * cw * (di + 2 * n)
+            + T * di * n * 6 + 2 * T * di * d)
+
+
+def _ctx(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Average attention context per query token."""
+    S = shape.seq_len
+    window = cfg.sliding_window if cfg.attn_variant == "swa" else 0
+    if shape.kind == "decode":
+        ctx = S
+    elif cfg.is_encoder:
+        ctx = S
+    else:
+        ctx = S / 2                             # causal average
+    if window:
+        ctx = min(ctx, window)
+    return ctx
+
+
+def estimate(cfg: ModelConfig, shape: ShapeConfig) -> CostEstimate:
+    B, S = shape.global_batch, shape.seq_len
+    T = B * (1 if shape.kind == "decode" else S)  # tokens processed
+    ctx = _ctx(cfg, shape)
+    cap = cfg.capacity_factor if cfg.is_moe else 1.0
+
+    per_layer = 0.0
+    layers_attn = 0
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        per_layer = _attn_layer_flops(cfg, T, ctx) + _mlp_layer_flops(cfg, T, cap)
+        fwd = cfg.num_layers * per_layer
+    elif cfg.arch_type == "ssm":
+        fwd = cfg.num_layers * _mamba_layer_flops(cfg, T)
+    else:  # hybrid
+        sites = cfg.num_layers // cfg.shared_attn_every
+        fwd = (cfg.num_layers * _mamba_layer_flops(cfg, T)
+               + sites * (_attn_layer_flops(cfg, T, ctx)
+                          + _mlp_layer_flops(cfg, T)))
+    # embedding + head
+    fwd += 2 * T * cfg.d_model * cfg.vocab_size
+    if cfg.modality != "audio_frames":
+        fwd += 0  # embed lookup is a gather, ~0 flops
+
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        flops = 4.0 * fwd            # fwd + 2x bwd + full-remat recompute
+        model = 6.0 * n_active * T
+    elif shape.kind == "prefill":
+        flops = fwd
+        model = 2.0 * n_active * T
+    else:
+        flops = fwd
+        model = 2.0 * n_active * T
+
+    # ---- HBM traffic (coarse, documented) ------------------------------
+    pbytes = 2.0 * n_params                      # bf16 weights read once
+    act = 2.0 * T * cfg.d_model * 12             # ~12 intermediate tensors/layer-agnostic
+    act *= max(1, cfg.num_layers // 8)           # activation reuse factor
+    cache = 0.0
+    if shape.kind == "decode" and cfg.arch_type not in ("ssm",):
+        kvh = cfg.num_kv_heads
+        eff_ctx = ctx
+        # bytes/elem: 2 (bf16) or 1 + scales overhead (int8-quantized KV)
+        kv_b = (1.0 + 4.0 / cfg.head_dim) if cfg.kv_cache_dtype == "int8" \
+            else 2.0
+        cache = (cfg.num_layers if cfg.arch_type != "hybrid"
+                 else cfg.num_layers // cfg.shared_attn_every) \
+            * B * eff_ctx * kvh * cfg.head_dim * 2 * kv_b
+    if shape.kind == "decode" and cfg.arch_type in ("ssm", "hybrid"):
+        cache += cfg.num_layers * B * cfg.d_inner * max(1, cfg.ssm_state) * 4
+    if shape.kind == "train":
+        hbm = 10.0 * 2 * n_params + 3 * act      # params+grads+opt + acts
+    else:
+        hbm = pbytes + act + cache
+    return CostEstimate(flops=flops, model_flops=model, hbm_bytes=hbm)

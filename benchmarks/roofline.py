@@ -1,0 +1,132 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and, per
+(arch x shape x mesh), derives the three roofline terms:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s          [s]
+    memory     = HLO_bytes_per_device / HBM_bw               [s]
+    collective = collective_bytes_per_device / ICI_link_bw   [s]
+
+cost_analysis() runs on the GSPMD-partitioned module, so its numbers are
+already per-device. collective_bytes sums result-tensor bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+in the partitioned HLO (a lower bound on wire traffic; all-reduce moves
+~2x its payload on a ring — noted, not corrected).
+
+MODEL_FLOPS (useful work): 6·N·T train / 2·N·T prefill / 2·N·B decode,
+with N_active for MoE. The ratio MODEL_FLOPS/HLO_FLOPs exposes remat and
+dispatch waste.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs.base import INPUT_SHAPES, get_config, variant_for_shape
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def analyze_record(rec: dict) -> dict | None:
+    """Derive the three roofline terms for one dry-run record.
+
+    compute & memory come from the ANALYTIC model (flops_model.py) because
+    XLA's cost_analysis counts while-loop bodies once; the collective term
+    comes from the loop-corrected HLO parse done by dryrun.py. All terms
+    are per-chip seconds.
+    """
+    from benchmarks.flops_model import estimate
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec["mesh"].startswith("2x") else 256
+    cfg = variant_for_shape(get_config(rec["arch"]),
+                            INPUT_SHAPES[rec["shape"]])
+    if rec.get("kv_cache_dtype"):
+        cfg = cfg.replace(kv_cache_dtype=rec["kv_cache_dtype"])
+    if rec.get("padded_heads"):
+        cfg = cfg.replace(num_heads=rec["padded_heads"][0],
+                          num_kv_heads=rec["padded_heads"][1])
+    est = estimate(cfg, INPUT_SHAPES[rec["shape"]])
+    flops = est.flops / chips
+    nbytes = est.hbm_bytes / chips
+    coll = rec.get("collective_bytes", {}).get("total", 0)  # per-device HLO
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = nbytes / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = est.model_flops / chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "flops": flops, "bytes": nbytes, "coll_bytes": coll,
+        "hlo_flops_raw": rec.get("flops", 0.0),
+        "variant": rec.get("attn_variant", "full"),
+    }
+
+
+def load_all(dirname: str) -> list:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        a = analyze_record(rec)
+        if a:
+            out.append(a)
+        elif rec.get("status") == "skipped":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "dominant": "SKIPPED",
+                        "reason": rec.get("reason", "")})
+    return out
+
+
+def fmt_table(rows: list, mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful FLOPs ratio |")
+    sep = "|" + "---|" * 7
+    lines = [hdr, sep]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["dominant"] == "SKIPPED":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | {r['reason']} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} ({r['variant']}) "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def run(dirname: str = "experiments/dryrun") -> list:
+    rows = load_all(dirname)
+    out = []
+    for r in rows:
+        if r["dominant"] == "SKIPPED" or r["mesh"] != "16x16":
+            continue
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        out.append((f"roofline_{r['arch']}_{r['shape']}",
+                    max(r['compute_s'], r['memory_s'], r['collective_s']) * 1e6,
+                    f"dominant={r['dominant']} useful={r['useful_ratio']:.2f}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    print(fmt_table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig6,fig7,fig8,table1,two_stage,"
+                         "streaming,roofline")
+    args = ap.parse_args()
+    sel = set(args.only.split(",")) if args.only else None
+
+    benches = []
+    if sel is None or "fig6" in sel:
+        from benchmarks import bench_e2e_omni
+        benches.append(("fig6", bench_e2e_omni.run))
+    if sel is None or "fig7" in sel:
+        from benchmarks import bench_decompose
+        benches.append(("fig7", bench_decompose.run))
+    if sel is None or "fig8" in sel:
+        from benchmarks import bench_dit
+        benches.append(("fig8", bench_dit.run))
+    if sel is None or "table1" in sel:
+        from benchmarks import bench_connector
+        benches.append(("table1", bench_connector.run))
+    if sel is None or "two_stage" in sel:
+        from benchmarks import bench_two_stage
+        benches.append(("two_stage", bench_two_stage.run))
+    if sel is None or "streaming" in sel:
+        from benchmarks import bench_streaming
+        benches.append(("streaming", bench_streaming.run))
+    if sel is None or "ablation" in sel:
+        from benchmarks import bench_ablation
+        benches.append(("ablation", bench_ablation.run))
+    if sel is None or "online" in sel:
+        from benchmarks import bench_online
+        benches.append(("online", bench_online.run))
+    if sel is None or "spec" in sel:
+        from benchmarks import bench_spec_decode
+        benches.append(("spec", bench_spec_decode.run))
+    if sel is None or "roofline" in sel:
+        from benchmarks import roofline
+        benches.append(("roofline", roofline.run))
+
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:  # keep the harness robust
+            print(f"{name}_ERROR,0,{type(e).__name__}: {e}", flush=True)
+            continue
+        for r in rows:
+            print(",".join(str(x) for x in r), flush=True)
+        print(f"{name}_harness_wall,{(time.perf_counter()-t0)*1e6:.0f},",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

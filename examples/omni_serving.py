@@ -1,0 +1,70 @@
+"""End-to-end driver: serve a Thinker->Talker->Vocoder any-to-any pipeline
+(Qwen-Omni style, paper Fig 4) with batched requests and streaming synthesis,
+and compare against the monolithic HF-style baseline.
+
+  PYTHONPATH=src python examples/omni_serving.py [--requests 8]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.baselines.monolithic import MonolithicQwenOmni
+from repro.configs.pipelines import build_qwen_omni
+from repro.core.orchestrator import Orchestrator
+from repro.core.request import Request
+from repro.models.dit import DiTConfig, init_dit
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--thinker-tokens", type=int, default=10)
+    ap.add_argument("--talker-tokens", type=int, default=40)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 500, size=int(rng.integers(8, 24))
+                            ).astype(np.int32) for _ in range(args.requests)]
+
+    # ---------------- disaggregated serving (this work) ----------------
+    graph, engines, bundle = build_qwen_omni(
+        max_batch=4, thinker_tokens=args.thinker_tokens,
+        talker_tokens=args.talker_tokens, stream_chunk=8, dit_steps=4)
+    orch = Orchestrator(graph, engines)
+    # warmup (jit)
+    orch.submit(Request(inputs={"tokens": prompts[0]}))
+    orch.run()
+    t0 = time.perf_counter()
+    reqs = [Request(inputs={"tokens": p}) for p in prompts]
+    for r in reqs:
+        orch.submit(r)
+    orch.run()
+    wall = time.perf_counter() - t0
+    jcts = [r.jct for r in reqs]
+    print(f"[disaggregated] {len(reqs)} requests in {wall:.2f}s | "
+          f"mean JCT {np.mean(jcts):.3f}s | "
+          f"stage busy {dict((k, round(v, 2)) for k, v in orch.stage_busy_times().items())}")
+    for r in reqs[:2]:
+        wavs = r.outputs["vocoder"]
+        n = sum(c["latent"].shape[0] for c in wavs)
+        print(f"  req {r.req_id}: text={r.data['thinker_tokens'][:6]}... "
+              f"audio_frames={n} (streamed {len(wavs)} chunks)")
+
+    # ---------------- monolithic baseline ------------------------------
+    vcfg = DiTConfig(name="voc", num_layers=2, d_model=128, num_heads=4,
+                     d_ff=256, in_dim=32, cond_dim=128, num_steps=4)
+    mono = MonolithicQwenOmni(bundle, (vcfg, init_dit(vcfg,
+                                                      jax.random.PRNGKey(9))),
+                              dit_steps=4)
+    mono.run(prompts[:1])                        # warmup
+    res = mono.run(prompts)
+    jct_m = float(np.mean([r["jct"] for r in res]))
+    print(f"[monolithic]    mean JCT {jct_m:.3f}s")
+    print(f"JCT reduction: {100 * (1 - np.mean(jcts) / jct_m):.1f}% "
+          f"(paper reports up to 91.4% for Qwen3-Omni)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,348 @@
+"""Any-to-any pipeline definitions (tiny, CPU-runnable) mirroring the
+paper's evaluated models (§4.1):
+
+  - qwen_omni   : Thinker (AR) -> Talker (AR) -> Vocoder (DiT or CNN)
+                  [Qwen2.5-Omni Fig 4 / Qwen3-Omni]
+  - glm_image   : AR LLM -> DiT image decoder            [GLM-Image]
+  - bagel       : understanding AR -> generation DiT     [BAGEL, MoT-as-stages]
+  - mimo_audio  : patch encoder -> AR LLM -> patch decoder [MiMo-Audio]
+
+Each builder returns (StageGraph, engines dict). Model sizes are smoke-scale
+so the serving benchmarks run on CPU; the stage graph machinery is the same
+one the full configs would use.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.graph import StageGraph
+from repro.core.stage import StageSpec
+from repro.engine.ar_engine import AREngine
+from repro.engine.diffusion_engine import (CustomEngine, DiffusionEngine,
+                                           EncodeEngine)
+from repro.engine.kv_cache import PagedKVConfig
+from repro.engine.sampling import SamplingParams
+from repro.models import transformer as T
+from repro.models.dit import DiTConfig, init_dit
+
+D = 128  # shared hidden size of the tiny pipeline stages
+
+
+def tiny_lm(name: str, vocab: int = 512, layers: int = 2) -> ModelConfig:
+    return ModelConfig(
+        name=name, arch_type="dense", num_layers=layers, d_model=D,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=vocab,
+        dtype="float32", rope_theta=10_000.0)
+
+
+def _kv(max_batch: int, max_seq: int = 256) -> PagedKVConfig:
+    page = 16
+    pages_per_seq = max_seq // page
+    return PagedKVConfig(num_pages=max_batch * pages_per_seq + 8,
+                         page_size=page, max_pages_per_seq=pages_per_seq)
+
+
+# ----------------------------------------------------------------------------
+# Qwen-Omni: Thinker -> Talker -> Vocoder
+# ----------------------------------------------------------------------------
+
+def build_qwen_omni(*, max_batch: int = 8, thinker_tokens: int = 24,
+                    talker_tokens: int = 72, stream_chunk: int = 16,
+                    vocoder_kind: str = "dit", dit_steps: int = 8,
+                    cache_interval: int = 1, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    thinker_cfg = tiny_lm("thinker")
+    talker_cfg = tiny_lm("talker", vocab=256)
+    thinker_params = T.init_params(thinker_cfg, ks[0])
+    talker_params = T.init_params(talker_cfg, ks[1])
+    codec_embed = np.asarray(
+        jax.random.normal(ks[2], (talker_cfg.vocab_size, D)) * 0.1,
+        np.float32)
+
+    def talker_preprocess(data, state):
+        """Re-inject the Thinker hidden state at every Talker decode step."""
+        h = data.get("thinker_hidden")
+        if h is None or state["phase"] != "decode":
+            return {}
+        i = min(state["step"], h.shape[0] - 1)
+        return {"extra_embed": h[i]}
+
+    mm_proj = np.asarray(
+        jax.random.normal(jax.random.fold_in(key, 9), (32, D)) * 0.1,
+        np.float32)
+
+    def mm_encode(data, state):
+        """mm_encode hook (Fig 4): precomputed audio/image/video frontend
+        embeddings (the stubbed modality frontend) are projected and
+        concatenated ahead of the Thinker text prompt."""
+        mm = data.get("mm_embeds")           # (frames, 32) from the stub
+        if mm is None or state["phase"] != "prefill":
+            return {}
+        data["mm_frames_used"] = mm.shape[0]
+        return {"prompt_prepend": np.asarray(mm, np.float32) @ mm_proj}
+
+    thinker = AREngine(
+        "thinker", thinker_cfg, thinker_params, kv=_kv(max_batch),
+        max_batch=max_batch, collect_hidden=True, preprocess=mm_encode,
+        default_sampling=SamplingParams(max_new_tokens=thinker_tokens,
+                                        temperature=0.8, top_k=20),
+        seed=seed)
+    talker = AREngine(
+        "talker", talker_cfg, talker_params, kv=_kv(max_batch),
+        max_batch=max_batch, preprocess=talker_preprocess,
+        stream_chunk=stream_chunk,
+        default_sampling=SamplingParams(max_new_tokens=talker_tokens,
+                                        temperature=0.8, top_k=20),
+        seed=seed + 1)
+
+    if vocoder_kind == "dit":
+        dit_cfg = DiTConfig(name="vocoder", num_layers=2, d_model=D,
+                            num_heads=4, d_ff=256, in_dim=32, cond_dim=D,
+                            num_steps=dit_steps)
+        vocoder = DiffusionEngine(
+            "vocoder", dit_cfg, init_dit(dit_cfg, ks[3]),
+            max_batch=max_batch, cache_interval=cache_interval,
+            out_len_per_cond=2.0, seed=seed + 2)
+    else:  # Qwen3-Omni style lightweight CNN vocoder
+        wk = jax.random.split(ks[3], 2)
+        w1 = jax.random.normal(wk[0], (3, D, D)) * 0.05
+        w2 = jax.random.normal(wk[1], (3, D, 32)) * 0.05
+
+        @jax.jit
+        def _conv_stack(cond):   # (B, T, D) -> (B, 2T, 32)
+            x = jax.lax.conv_general_dilated(
+                cond, w1, (1,), "SAME", dimension_numbers=("NWC", "WIO", "NWC"))
+            x = jax.nn.gelu(x)
+            x = jnp.repeat(x, 2, axis=1)          # 2x upsample
+            x = jax.lax.conv_general_dilated(
+                x, w2, (1,), "SAME", dimension_numbers=("NWC", "WIO", "NWC"))
+            return x
+
+        def vocode(batch_inputs):
+            conds = [np.asarray(i["cond"]) for i in batch_inputs]
+            tmax = max(c.shape[0] for c in conds)
+            stacked = np.stack([np.pad(c, ((0, tmax - c.shape[0]), (0, 0)))
+                                for c in conds])
+            out = np.asarray(_conv_stack(jnp.asarray(stacked)))
+            res = []
+            for i, inp in enumerate(batch_inputs):
+                n = inp["cond"].shape[0] * 2
+                res.append({"latent": out[i, :n],
+                            "chunk_index": inp.get("chunk_index", 0)})
+            return res
+        vocoder = CustomEngine("vocoder", vocode, max_batch=max_batch)
+
+    graph = StageGraph()
+    graph.add_stage(StageSpec("thinker", "ar"))
+    graph.add_stage(StageSpec("talker", "ar"))
+    graph.add_stage(StageSpec("vocoder",
+                              "diffusion" if vocoder_kind == "dit"
+                              else "custom", is_output=True))
+
+    def thinker2talker(data, payload):
+        data["thinker_hidden"] = payload["hidden"]
+        data["thinker_tokens"] = payload["tokens"]
+        return {"prompt_embeds": payload["hidden"]}
+
+    def talker2vocoder(data, payload):
+        toks = payload["tokens"]
+        return {"cond": codec_embed[toks]}
+
+    graph.add_edge("thinker", "talker", thinker2talker, connector="shm")
+    graph.add_edge("talker", "vocoder", talker2vocoder, streaming=True,
+                   connector="inline")
+    engines = {"thinker": thinker, "talker": talker, "vocoder": vocoder}
+    bundle = {"thinker_cfg": thinker_cfg, "thinker_params": thinker_params,
+              "talker_cfg": talker_cfg, "talker_params": talker_params,
+              "codec_embed": codec_embed,
+              "thinker_tokens": thinker_tokens,
+              "talker_tokens": talker_tokens}
+    return graph, engines, bundle
+
+
+# ----------------------------------------------------------------------------
+# GLM-Image / BAGEL: AR LLM -> DiT generator
+# ----------------------------------------------------------------------------
+
+def build_ar_dit(name: str = "glm_image", *, max_batch: int = 8,
+                 ar_tokens: int = 32, image_latents: int = 64,
+                 dit_steps: int = 8, cache_interval: int = 1, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    llm_cfg = tiny_lm(f"{name}_llm")
+    llm_params = T.init_params(llm_cfg, ks[0])
+    vq_embed = np.asarray(
+        jax.random.normal(ks[1], (llm_cfg.vocab_size, D)) * 0.1, np.float32)
+    dit_cfg = DiTConfig(name=f"{name}_dit", num_layers=2, d_model=D,
+                        num_heads=4, d_ff=256, in_dim=32, cond_dim=D,
+                        num_steps=dit_steps)
+    llm = AREngine(
+        f"{name}_llm", llm_cfg, llm_params, kv=_kv(max_batch),
+        max_batch=max_batch, collect_hidden=True,
+        default_sampling=SamplingParams(max_new_tokens=ar_tokens,
+                                        temperature=0.8, top_k=20),
+        seed=seed)
+    dit = DiffusionEngine(f"{name}_dit", dit_cfg, init_dit(dit_cfg, ks[2]),
+                          max_batch=max_batch, cache_interval=cache_interval,
+                          seed=seed + 1)
+
+    graph = StageGraph()
+    graph.add_stage(StageSpec(f"{name}_llm", "ar"))
+    graph.add_stage(StageSpec(f"{name}_dit", "diffusion", is_output=True))
+
+    def llm2dit(data, payload):
+        return {"cond": vq_embed[payload["tokens"]],
+                "out_len": image_latents}
+
+    graph.add_edge(f"{name}_llm", f"{name}_dit", llm2dit, connector="shm")
+    return graph, {f"{name}_llm": llm, f"{name}_dit": dit}, {
+        "llm_cfg": llm_cfg, "llm_params": llm_params, "vq_embed": vq_embed,
+        "ar_tokens": ar_tokens, "image_latents": image_latents,
+        "dit_cfg": dit_cfg}
+
+
+# ----------------------------------------------------------------------------
+# Prefill-Decode disaggregation (paper §3.4: the unified connector also
+# carries intra-stage transfers — prompt KV from a prefill engine to a
+# decode engine, vLLM PD-disaggregation style)
+# ----------------------------------------------------------------------------
+
+def build_pd_disaggregated(cfg: ModelConfig = None, *, max_batch: int = 4,
+                           max_new: int = 8, temperature: float = 0.0,
+                           connector: str = "shm", seed: int = 0):
+    import jax as _jax
+    from repro.models import transformer as _T
+    cfg = cfg or tiny_lm("pd_lm", vocab=512)
+    params = _T.init_params(cfg, _jax.random.PRNGKey(seed))
+    prefill = AREngine(
+        "prefill", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
+        emit_kv=True, collect_hidden=False,
+        default_sampling=SamplingParams(max_new_tokens=1,
+                                        temperature=temperature),
+        seed=seed)
+    decode = AREngine(
+        "decode", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
+        default_sampling=SamplingParams(max_new_tokens=max_new,
+                                        temperature=temperature),
+        seed=seed)
+
+    def prefill2decode(data, payload):
+        return {"kv_seed": (payload["kv_k"], payload["kv_v"]),
+                "prompt_len": payload["prompt_len"],
+                "first_token": int(payload["tokens"][0])}
+
+    graph = StageGraph()
+    graph.add_stage(StageSpec("prefill", "ar"))
+    graph.add_stage(StageSpec("decode", "ar", is_output=True))
+    graph.add_edge("prefill", "decode", prefill2decode, connector=connector)
+    return graph, {"prefill": prefill, "decode": decode}, {
+        "cfg": cfg, "params": params}
+
+
+# ----------------------------------------------------------------------------
+# EPD disaggregation (paper §3.4 / Singh et al.): Encoder, Prefill and
+# Decode each on their own engine; the MM cache (encoder embeddings) and
+# the prompt KV both travel through the unified connector.
+# ----------------------------------------------------------------------------
+
+def build_epd_disaggregated(*, max_batch: int = 4, max_new: int = 8,
+                            frame_dim: int = 32, connector: str = "shm",
+                            seed: int = 0):
+    import jax as _jax
+    from repro.engine.diffusion_engine import EncodeEngine
+    from repro.models import transformer as _T
+    cfg = tiny_lm("epd_lm", vocab=512)
+    params = _T.init_params(cfg, _jax.random.PRNGKey(seed))
+    w_enc = np.asarray(
+        _jax.random.normal(_jax.random.PRNGKey(seed + 1), (frame_dim, D))
+        * 0.1, np.float32)
+
+    def encode(batch_inputs):
+        # stubbed modality frontend: frames -> prompt embeddings (MM cache)
+        return [{"prompt_embeds": np.asarray(i["frames"], np.float32)
+                 @ w_enc} for i in batch_inputs]
+
+    encoder = EncodeEngine("encoder", encode, max_batch=max_batch)
+    prefill = AREngine(
+        "prefill", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
+        emit_kv=True,
+        default_sampling=SamplingParams(max_new_tokens=1, temperature=0.0),
+        seed=seed)
+    decode = AREngine(
+        "decode", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
+        default_sampling=SamplingParams(max_new_tokens=max_new,
+                                        temperature=0.0),
+        seed=seed)
+
+    graph = StageGraph()
+    graph.add_stage(StageSpec("encoder", "encode"))
+    graph.add_stage(StageSpec("prefill", "ar"))
+    graph.add_stage(StageSpec("decode", "ar", is_output=True))
+    graph.add_edge("encoder", "prefill", lambda d, p: p,
+                   connector=connector)            # MM cache hop
+    graph.add_edge("prefill", "decode",
+                   lambda d, p: {"kv_seed": (p["kv_k"], p["kv_v"]),
+                                 "prompt_len": p["prompt_len"],
+                                 "first_token": int(p["tokens"][0])},
+                   connector=connector)            # prompt-KV hop
+    return graph, {"encoder": encoder, "prefill": prefill,
+                   "decode": decode}, {"cfg": cfg, "params": params,
+                                       "w_enc": w_enc}
+
+
+# ----------------------------------------------------------------------------
+# MiMo-Audio: patch encoder -> AR LLM -> patch decoder
+# ----------------------------------------------------------------------------
+
+def build_mimo_audio(*, max_batch: int = 8, ar_tokens: int = 48,
+                     patch: int = 4, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    llm_cfg = tiny_lm("mimo_llm")
+    llm_params = T.init_params(llm_cfg, ks[0])
+    w_enc = np.asarray(jax.random.normal(ks[1], (patch * 16, D)) * 0.1,
+                       np.float32)
+    w_dec = np.asarray(jax.random.normal(ks[2], (D, patch * 16)) * 0.1,
+                       np.float32)
+    tok_embed = np.asarray(
+        jax.random.normal(ks[3], (llm_cfg.vocab_size, D)) * 0.1, np.float32)
+
+    def encode(batch_inputs):
+        res = []
+        for inp in batch_inputs:
+            audio = np.asarray(inp["audio"])        # (frames, 16)
+            n = (audio.shape[0] // patch) * patch
+            patches = audio[:n].reshape(-1, patch * 16)
+            res.append({"prompt_embeds": patches @ w_enc})
+        return res
+
+    def decode(batch_inputs):
+        res = []
+        for inp in batch_inputs:
+            emb = tok_embed[np.asarray(inp["tokens"])]
+            res.append({"audio": emb @ w_dec})
+        return res
+
+    enc = EncodeEngine("patch_enc", encode, max_batch=max_batch)
+    llm = AREngine("mimo_llm", llm_cfg, llm_params, kv=_kv(max_batch),
+                   max_batch=max_batch,
+                   default_sampling=SamplingParams(max_new_tokens=ar_tokens,
+                                                   temperature=0.8, top_k=20),
+                   seed=seed)
+    dec = CustomEngine("patch_dec", decode, max_batch=max_batch)
+
+    graph = StageGraph()
+    graph.add_stage(StageSpec("patch_enc", "encode"))
+    graph.add_stage(StageSpec("mimo_llm", "ar"))
+    graph.add_stage(StageSpec("patch_dec", "custom", is_output=True))
+    graph.add_edge("patch_enc", "mimo_llm", lambda d, p: p, connector="shm")
+    graph.add_edge("mimo_llm", "patch_dec",
+                   lambda d, p: {"tokens": p["tokens"]}, connector="inline")
+    return graph, {"patch_enc": enc, "mimo_llm": llm, "patch_dec": dec}, {
+        "llm_cfg": llm_cfg, "patch": patch}

@@ -1,0 +1,69 @@
+"""Mooncake-style connector: cross-node put/get object store.
+
+Data plane: serializing copy on put and on get (two memcpys, as in a real
+distributed KV store client), plus a TCP/RDMA hop cost model
+(latency + bytes/bandwidth) reported as ``stats.modeled_time`` — this
+container has one node, so the wire time is modeled, not slept.
+Control plane: metadata only ({key, nbytes, location}), as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.connector.base import Connector, payload_nbytes
+
+
+class MooncakeConnector(Connector):
+    name = "mooncake"
+
+    def __init__(self, bandwidth_gbps: float = 12.5, latency_s: float = 30e-6):
+        """Defaults model 100 GbE RDMA: 12.5 GB/s, 30us one-way latency."""
+        super().__init__()
+        self._objects: Dict[str, tuple] = {}
+        self.bandwidth = bandwidth_gbps * 1e9
+        self.latency = latency_s
+
+    def _wire_time(self, nbytes: int) -> float:
+        return self.latency + nbytes / self.bandwidth
+
+    def _store(self, key: str, payload: Any) -> float:
+        leaves, treedef = jax.tree.flatten(payload)
+        blobs = []
+        for leaf in leaves:
+            if hasattr(leaf, "shape"):
+                arr = np.asarray(leaf)
+                blobs.append(("arr", arr.tobytes(), arr.dtype.str, arr.shape))
+            else:
+                blobs.append(("py", leaf, None, None))
+        self._objects[key] = (blobs, treedef)
+        return self._wire_time(payload_nbytes(payload))
+
+    def _load(self, key: str) -> Tuple[Any, float]:
+        blobs, treedef = self._objects[key]
+        leaves = []
+        nbytes = 0
+        for kind, data, dtype, shape in blobs:
+            if kind == "arr":
+                leaves.append(np.frombuffer(data, dtype=dtype).reshape(shape))
+                nbytes += len(data)
+            else:
+                leaves.append(data)
+        return jax.tree.unflatten(treedef, leaves), self._wire_time(nbytes)
+
+    def _evict(self, key: str) -> None:
+        self._objects.pop(key, None)
+
+
+def make_connector(name: str, **kw) -> Connector:
+    from repro.connector.inline import InlineConnector
+    from repro.connector.shm import SharedMemoryConnector
+    if name == "inline":
+        return InlineConnector()
+    if name == "shm":
+        return SharedMemoryConnector()
+    if name == "mooncake":
+        return MooncakeConnector(**kw)
+    raise ValueError(f"unknown connector {name!r}")

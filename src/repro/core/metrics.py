@@ -1,0 +1,34 @@
+"""Serving metrics: JCT / TTFT / throughput summaries over completed
+requests (the quantities the paper's §4 tables report)."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.request import Request
+
+
+def _pct(xs: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")
+
+
+def summarize(requests: List[Request], wall_time: Optional[float] = None,
+              audio_frames: Optional[int] = None,
+              frame_seconds: float = 0.02) -> Dict[str, float]:
+    jcts = [r.jct for r in requests if r.jct is not None]
+    ttfts = [r.first_output_time - r.arrival_time for r in requests
+             if r.first_output_time is not None]
+    out = {
+        "n": len(requests),
+        "jct_mean": float(np.mean(jcts)) if jcts else float("nan"),
+        "jct_p50": _pct(jcts, 50),
+        "jct_p95": _pct(jcts, 95),
+        "ttft_p50": _pct(ttfts, 50),
+        "ttft_p95": _pct(ttfts, 95),
+    }
+    if wall_time:
+        out["req_per_s"] = len(jcts) / wall_time
+    if audio_frames:
+        out["rtf_mean"] = out["jct_mean"] / (audio_frames * frame_seconds)
+    return out

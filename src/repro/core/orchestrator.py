@@ -1,0 +1,145 @@
+"""Orchestrator (paper §3.1/§3.3): routes requests through the stage graph.
+
+One process manages all stage engines: each tick it steps every engine,
+collects finished / streamed outputs, applies edge transfer functions,
+moves payloads through the per-edge connector (put/get with metadata
+control plane), and enqueues downstream stage inputs. Streaming edges
+forward chunks before the upstream stage finishes, overlapping stages
+(paper's "streaming stage output").
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+from repro.connector.base import Connector
+from repro.connector.mooncake import make_connector
+from repro.core.graph import StageGraph
+from repro.core.request import Request, StageEvent
+from repro.engine.sampling import SamplingParams
+
+
+class Orchestrator:
+    def __init__(self, graph: StageGraph, engines: Dict[str, Any],
+                 connectors: Optional[Dict[str, Connector]] = None):
+        graph.validate()
+        self.graph = graph
+        self.engines = engines
+        for name in graph.stages:
+            if name not in engines:
+                raise ValueError(f"no engine bound for stage {name!r}")
+        # one connector instance per backend kind (shared across edges)
+        kinds = {e.connector for e in graph.edges}
+        self.connectors = connectors or {k: make_connector(k) for k in kinds}
+        self.requests: Dict[int, Request] = {}
+        self._outputs_pending: Dict[int, set] = {}
+        self.completed: List[Request] = []
+        self._transfer_log: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        self.requests[request.req_id] = request
+        self._outputs_pending[request.req_id] = set(
+            self.graph.output_stages())
+        for src in self.graph.sources():
+            spec = self.graph.stages[src]
+            request.mark_stage_start(src)
+            self.engines[src].enqueue(
+                request.req_id, request.inputs,
+                SamplingParams(**request.sampling) if request.sampling
+                else SamplingParams(),
+                request.data)
+
+    # ------------------------------------------------------------------
+    def _route(self, ev: StageEvent) -> None:
+        req = self.requests[ev.req_id]
+        stage = ev.stage
+        if ev.kind == "finished":
+            req.mark_stage_end(stage)
+        for edge in self.graph.out_edges(stage):
+            if ev.kind == "chunk" and not edge.streaming:
+                continue                      # non-streaming edges wait
+            if ev.kind == "finished" and edge.streaming and ev.payload.get(
+                    "n_chunks", 0) > 0:
+                continue                      # chunks already forwarded
+            conn = self.connectors[edge.connector]
+            key = f"{edge.src}->{edge.dst}/{req.req_id}/{ev.chunk_index}"
+            conn.put(key, ev.payload)
+            payload = conn.get(key)
+            conn.delete(key)
+            self._transfer_log.append({
+                "edge": f"{edge.src}->{edge.dst}",
+                "connector": edge.connector,
+                "req_id": req.req_id,
+            })
+            try:
+                inputs = edge.transfer(req.data, payload)
+            except Exception as e:
+                # a broken user transfer fn fails THIS request, not the
+                # serving loop: mark failed + complete so callers unblock
+                req.failed = (f"transfer {edge.src}->{edge.dst}: "
+                              f"{type(e).__name__}: {e}")
+                req.completion_time = time.perf_counter()
+                self._outputs_pending.pop(req.req_id, None)
+                self.completed.append(req)
+                continue
+            if inputs is None:
+                continue                      # transfer fn filtered this event
+            if ev.kind == "chunk":
+                inputs.setdefault("chunk_index", ev.chunk_index)
+                inputs.setdefault("is_last_chunk", ev.is_last)
+            dst = self.graph.stages[edge.dst]
+            req.mark_stage_start(edge.dst)
+            self.engines[edge.dst].enqueue(
+                req.req_id, inputs,
+                SamplingParams(**req.sampling) if req.sampling
+                else SamplingParams(),
+                req.data)
+
+        # terminal output collection
+        spec = self.graph.stages[stage]
+        outs = self._outputs_pending.get(ev.req_id)
+        if outs is None or stage not in outs:
+            return
+        if req.first_output_time is None:
+            req.first_output_time = time.perf_counter()
+        if ev.kind == "finished" or (ev.kind == "chunk" and ev.is_last):
+            req.outputs.setdefault(stage, []).append(ev.payload)
+            req.mark_stage_end(stage)
+            outs.discard(stage)
+            if not outs:
+                req.completion_time = time.perf_counter()
+                self.completed.append(req)
+        elif ev.kind == "chunk":
+            req.outputs.setdefault(stage, []).append(ev.payload)
+
+    # ------------------------------------------------------------------
+    def tick(self) -> int:
+        """Step every engine once; returns number of events processed."""
+        n = 0
+        for name in self.graph.topo_order():
+            for ev in self.engines[name].step():
+                ev.stage = ev.stage or name
+                self._route(ev)
+                n += 1
+        return n
+
+    def run(self, max_ticks: int = 100_000) -> List[Request]:
+        for _ in range(max_ticks):
+            if all(r.completion_time is not None
+                   for r in self.requests.values()):
+                break
+            busy = any(self.engines[n].has_work for n in self.graph.stages)
+            self.tick()
+            if not busy:
+                break
+        return self.completed
+
+    # ------------------------------------------------------------------
+    def stage_busy_times(self) -> Dict[str, float]:
+        return {n: getattr(self.engines[n], "busy_time", 0.0)
+                for n in self.graph.stages}
+
+    def connector_stats(self) -> Dict[str, Any]:
+        return {k: c.stats for k, c in self.connectors.items()}

@@ -1,0 +1,363 @@
+"""AR stage execution engine: continuous batching + chunked prefill +
+paged-KV decode, with per-iteration preprocess hooks (paper §3.3).
+
+One engine serves one stage. Each ``step()`` executes one scheduler plan:
+admissions, prefill chunks, one batched decode, sampling, and event
+emission (finished outputs and streamed chunks).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.request import StageEvent
+from repro.engine.kv_cache import PagedKVConfig
+from repro.engine.runner import PagedRunner, StateRunner
+from repro.engine.sampling import SamplingParams, sample_tokens
+from repro.engine.scheduler import Scheduler
+
+
+def _ngram_propose(ctx: List[int], m: int, k: int) -> List[int]:
+    """Prompt-lookup drafting: continue the most recent earlier occurrence
+    of the trailing m-gram."""
+    if len(ctx) < m + 1:
+        return []
+    key = tuple(ctx[-m:])
+    for i in range(len(ctx) - m - 1, -1, -1):
+        if tuple(ctx[i:i + m]) == key:
+            return [int(t) for t in ctx[i + m:i + m + k]]
+    return []
+
+
+@dataclass
+class _ReqRuntime:
+    prompt_embeds: Optional[np.ndarray] = None   # (S, d) resolved prompt
+    prompt_tokens: Optional[List[int]] = None    # for n-gram drafting
+    data: Dict[str, Any] = field(default_factory=dict)
+    tokens: List[int] = field(default_factory=list)
+    hiddens: List[np.ndarray] = field(default_factory=list)
+    last_logits: Optional[jax.Array] = None
+    streamed: int = 0
+    chunk_index: int = 0
+    t_first_sched: Optional[float] = None
+    kv_seed: Optional[tuple] = None              # (k, v, prompt_len) — PD
+
+
+class AREngine:
+    def __init__(self, name: str, cfg: ModelConfig, params, *,
+                 kv: Optional[PagedKVConfig] = None, max_batch: int = 8,
+                 token_budget: int = 256, chunk_size: int = 64,
+                 preprocess: Optional[Callable] = None,
+                 stream_chunk: int = 0, collect_hidden: bool = False,
+                 default_sampling: Optional[SamplingParams] = None,
+                 emit_kv: bool = False,
+                 spec_ngram: Optional[tuple] = None, seed: int = 0):
+        self.name = name
+        self.cfg = cfg
+        self.kv = kv or PagedKVConfig()
+        self.max_batch = max_batch
+        self.preprocess = preprocess
+        self.stream_chunk = stream_chunk
+        self.collect_hidden = collect_hidden
+        self.default_sampling = default_sampling
+        self.emit_kv = emit_kv   # prefill stage: ship prompt KV on finish
+        # n-gram speculative decoding (greedy only): (match_len m, draft_k).
+        # Drafts come from prompt-lookup (most recent m-gram match in the
+        # context); verification is one chunk forward; rejected drafts'
+        # page writes are masked by seq_lens and overwritten later, so
+        # rollback is free.
+        self.spec_ngram = spec_ngram
+        self.spec_stats = {"proposed": 0, "accepted": 0, "steps": 0}
+        self.scheduler = Scheduler(self.kv, max_batch, token_budget,
+                                   chunk_size)
+        if cfg.arch_type in ("ssm", "hybrid"):
+            self.runner: Any = StateRunner(cfg, params, self.kv, max_batch)
+            self._paged = False
+            # SSM prefill is one scan — admit whole prompts as one chunk
+            self.scheduler.chunk_size = self.kv.max_seq
+        else:
+            self.runner = PagedRunner(cfg, params, self.kv)
+            self._paged = True
+        self._rt: Dict[int, _ReqRuntime] = {}
+        self._key = jax.random.PRNGKey(seed)
+        self.steps = 0
+        self.busy_time = 0.0
+
+    # ------------------------------------------------------------------
+    def enqueue(self, req_id: int, inputs: Dict[str, Any],
+                sampling: SamplingParams, data: Dict[str, Any]) -> None:
+        if self.default_sampling is not None:
+            sampling = self.default_sampling
+        rt = _ReqRuntime(data=data)
+        if "kv_seed" in inputs:
+            # PD disaggregation: prompt KV arrives from a prefill stage
+            k, v = inputs["kv_seed"]
+            n = int(inputs["prompt_len"])
+            rt.kv_seed = (np.asarray(k), np.asarray(v), n)
+            rt.tokens = [int(inputs["first_token"])]
+            if inputs.get("hidden") is not None and self.collect_hidden:
+                rt.hiddens = [np.asarray(h) for h in inputs["hidden"]]
+            self._rt[req_id] = rt
+            self.scheduler.add_prefilled(req_id, n, sampling)
+            return
+        if "prompt_embeds" in inputs:
+            pe = np.asarray(inputs["prompt_embeds"])
+        else:
+            tokens = np.asarray(inputs["tokens"], np.int32)
+            rt.prompt_tokens = [int(t) for t in tokens]
+            pe = np.asarray(self.runner.embed(tokens))
+        if self.preprocess is not None:
+            extra = self.preprocess(data, {"phase": "prefill",
+                                           "prompt_len": pe.shape[0]})
+            if extra and "prompt_extra" in extra:
+                pe = pe + np.asarray(extra["prompt_extra"], pe.dtype)
+            if extra and "prompt_prepend" in extra:
+                # mm_encode hook (paper Fig 4): multimodal embeddings are
+                # concatenated ahead of the text prompt
+                pe = np.concatenate(
+                    [np.asarray(extra["prompt_prepend"], pe.dtype), pe], 0)
+        rt.prompt_embeds = pe
+        self._rt[req_id] = rt
+        self.scheduler.add(req_id, pe.shape[0], sampling)
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    # ------------------------------------------------------------------
+    def _sample(self, req_id: int, logits: jax.Array) -> int:
+        sp = self.scheduler.running[req_id].sampling
+        self._key, sk = jax.random.split(self._key)
+        tok = int(sample_tokens(logits[None], sp.temperature, sp.top_k, sk)[0])
+        return tok
+
+    def _decode_embed_row(self, req_id: int) -> np.ndarray:
+        rt = self._rt[req_id]
+        tok = rt.tokens[-1]
+        e = np.asarray(self.runner.embed(np.array([tok], np.int32)))[0]
+        if self.preprocess is not None:
+            extra = self.preprocess(
+                rt.data, {"phase": "decode", "step": len(rt.tokens) - 1})
+            if extra and "extra_embed" in extra:
+                e = e + np.asarray(extra["extra_embed"], e.dtype)
+        return e
+
+    def _emit_progress(self, req_id: int, events: List[StageEvent],
+                       finished: bool) -> None:
+        rt = self._rt[req_id]
+        if self.stream_chunk > 0:
+            while (len(rt.tokens) - rt.streamed >= self.stream_chunk
+                   or (finished and rt.streamed < len(rt.tokens))):
+                end = min(rt.streamed + self.stream_chunk, len(rt.tokens))
+                payload = {
+                    "tokens": np.array(rt.tokens[rt.streamed:end], np.int32),
+                    "hidden": (np.stack(rt.hiddens[rt.streamed:end])
+                               if self.collect_hidden else None),
+                }
+                is_last = finished and end == len(rt.tokens)
+                events.append(StageEvent(req_id, "chunk", payload,
+                                         stage=self.name,
+                                         chunk_index=rt.chunk_index,
+                                         is_last=is_last))
+                rt.chunk_index += 1
+                rt.streamed = end
+                if end == len(rt.tokens):
+                    break
+        if finished:
+            payload = {
+                "tokens": np.array(rt.tokens, np.int32),
+                "hidden": (np.stack(rt.hiddens) if self.collect_hidden
+                           and rt.hiddens else None),
+                "n_chunks": rt.chunk_index,
+            }
+            if self.emit_kv and self._paged:
+                seq = self.scheduler.running[req_id]
+                bt = self.scheduler.tables.row(req_id)
+                k, v = self.runner.extract_kv(bt, seq.pos)
+                payload.update({"kv_k": k, "kv_v": v,
+                                "prompt_len": seq.pos})
+            events.append(StageEvent(req_id, "finished", payload,
+                                     stage=self.name))
+
+    # ------------------------------------------------------------------
+    def _spec_decode_one(self, rid: int, events: List[StageEvent]) -> bool:
+        """One speculative step for one request. Returns True if handled
+        (the request must then be excluded from the batched decode)."""
+        seq = self.scheduler.running[rid]
+        rt = self._rt[rid]
+        if (seq.sampling.temperature > 0 or rt.prompt_tokens is None):
+            return False
+        m, k = self.spec_ngram
+        ctx = rt.prompt_tokens + rt.tokens
+        draft = _ngram_propose(ctx, m, k)
+        if not draft:
+            return False
+        # dedicated small verification bucket (one compiled shape)
+        bucket = max(8, 1 << (k).bit_length())
+        draft = draft[:bucket - 1]
+        toks = np.array([rt.tokens[-1]] + draft, np.int32)
+        emb = np.asarray(self.runner.embed(toks))
+        embp = np.pad(emb, ((0, bucket - emb.shape[0]), (0, 0)))
+        bt = self.scheduler.tables.row(rid)
+        logits, hidden = self.runner.prefill_chunk(
+            jnp.asarray(embp, jnp.dtype(self.cfg.dtype))[None], bt,
+            seq.pos, len(toks))
+        greedy = np.asarray(jnp.argmax(logits[:len(toks)], axis=-1))
+        acc = 0
+        while acc < len(draft) and draft[acc] == int(greedy[acc]):
+            acc += 1
+        emitted = [int(t) for t in greedy[:acc + 1]]
+        remaining = seq.sampling.max_new_tokens - seq.generated
+        emitted = emitted[:max(1, remaining)]
+        self.spec_stats["steps"] += 1
+        self.spec_stats["proposed"] += len(draft)
+        self.spec_stats["accepted"] += len(emitted) - 1
+        for _ in range(len(emitted)):       # KV written: last_tok + accepted
+            self.scheduler.note_decode_written(rid)
+        finished = False
+        for i, tok in enumerate(emitted):
+            rt.tokens.append(tok)
+            if self.collect_hidden:
+                rt.hiddens.append(np.asarray(hidden[i]))
+            finished = self.scheduler.note_sampled(rid, tok)
+            if finished:
+                break
+        self._emit_progress(rid, events, finished)
+        if finished:
+            self.scheduler.release(rid)
+            self._rt.pop(rid)
+        return True
+
+    def step(self) -> List[StageEvent]:
+        t0 = time.perf_counter()
+        events: List[StageEvent] = []
+        plan = self.scheduler.schedule()
+        # preemption (recompute mode): the victim's generated tokens (minus
+        # the unwritten last one) join its prompt for re-prefill
+        for rid in plan.preempted:
+            rt = self._rt.get(rid)
+            if rt is None or len(rt.tokens) < 1:
+                continue
+            # PD-seeded requests have no prompt embeddings to recompute
+            # from — never enable preemption on a PD decode stage
+            assert rt.prompt_embeds is not None, \
+                "preemption is unsupported for KV-seeded (PD) requests"
+            gen = np.array(rt.tokens[:-1], np.int32)
+            if len(gen):
+                rt.prompt_embeds = np.concatenate(
+                    [rt.prompt_embeds, np.asarray(self.runner.embed(gen))], 0)
+        # PD disaggregation: inject transferred KV for newly admitted
+        # pre-filled requests before their first decode step
+        for rid in plan.admitted:
+            rt = self._rt.get(rid)
+            if rt is not None and rt.kv_seed is not None:
+                k, v, n = rt.kv_seed
+                self.runner.inject_kv(
+                    k, v, self.scheduler.tables.row(rid), n)
+                rt.kv_seed = None
+        if not plan.prefill_chunks and not plan.decode_req_ids:
+            return events
+        self.steps += 1
+
+        # ---- prefill chunks (one request-chunk at a time) --------------
+        for ch in plan.prefill_chunks:
+            rt = self._rt[ch.req_id]
+            seq = self.scheduler.running[ch.req_id]
+            emb = rt.prompt_embeds[ch.start:ch.start + ch.length]
+            if self._paged:
+                # pad to the chunk bucket so jit shapes stay few
+                bucket = self.scheduler.chunk_size
+                pad = bucket - emb.shape[0] if emb.shape[0] < bucket else 0
+                embp = np.pad(emb, ((0, pad), (0, 0)))
+                bt = self.scheduler.tables.row(ch.req_id)
+                logits, hidden = self.runner.prefill_chunk(
+                    jnp.asarray(embp)[None], bt, ch.start, ch.length)
+                last_logits = logits[ch.length - 1]
+            else:
+                logits, _ = self.runner.prefill(
+                    jnp.asarray(emb)[None], seq.slot)
+                last_logits = logits[-1]
+                hidden = None
+            self.scheduler.note_prefill(ch.req_id, ch.length)
+            if not seq.in_prefill and seq.resumed:
+                # resumed after preemption: the next token was already
+                # sampled before eviction — decode continues from it
+                seq.resumed = False
+                continue
+            if not seq.in_prefill:
+                # prompt complete: sample the first token from prefill logits
+                tok = self._sample(ch.req_id, last_logits)
+                rt.tokens.append(tok)
+                if self.collect_hidden and hidden is not None:
+                    rt.hiddens.append(np.asarray(hidden[ch.length - 1]))
+                finished = self.scheduler.note_sampled(ch.req_id, tok)
+                self._emit_progress(ch.req_id, events, finished)
+                if finished:
+                    self.scheduler.release(ch.req_id)
+                    self._rt.pop(ch.req_id)
+
+        # ---- batched decode --------------------------------------------
+        dec_ids = [r for r in plan.decode_req_ids
+                   if r in self.scheduler.running
+                   and not self.scheduler.running[r].finished]
+
+        # ---- speculative decode (n-gram draft + chunk verify) -----------
+        if self.spec_ngram and self._paged and self.preprocess is None:
+            for rid in list(dec_ids):
+                if self._spec_decode_one(rid, events):
+                    dec_ids.remove(rid)
+        if dec_ids:
+            B = self.max_batch
+            d = self.cfg.d_model
+            embeds = np.zeros((B, 1, d), np.float32)
+            positions = np.zeros((B,), np.int32)
+            active = np.zeros((B,), bool)
+            tables = np.zeros((B, self.kv.max_pages_per_seq), np.int32)
+            slot_of = {}
+            for rid in dec_ids:
+                seq = self.scheduler.running[rid]
+                s = seq.slot
+                slot_of[rid] = s
+                embeds[s, 0] = self._decode_embed_row(rid)
+                positions[s] = seq.pos
+                active[s] = True
+                tables[s] = self.scheduler.tables.row(rid)
+            dt = jnp.dtype(self.cfg.dtype)
+            logits, hidden = self.runner.decode(
+                jnp.asarray(embeds, dt), tables, positions, active)
+            hidden_np = (np.asarray(hidden) if hidden is not None else None)
+            # batch sampling: one jitted call per (temperature, top_k) group
+            groups: Dict[tuple, List[int]] = {}
+            for rid in dec_ids:
+                sp = self.scheduler.running[rid].sampling
+                groups.setdefault((sp.temperature, sp.top_k), []).append(rid)
+            sampled: Dict[int, int] = {}
+            for (temp, tk), rids in groups.items():
+                # pad the row-gather to max_batch: one compiled shape
+                slots = [slot_of[r] for r in rids]
+                rows = jnp.asarray(slots + [0] * (self.max_batch - len(slots)))
+                self._key, sk = jax.random.split(self._key)
+                toks = np.asarray(sample_tokens(logits[rows], temp, tk, sk))
+                sampled.update(zip(rids, toks[:len(rids)].tolist()))
+            for rid in dec_ids:
+                s = slot_of[rid]
+                self.scheduler.note_decode_written(rid)
+                tok = int(sampled[rid])
+                rt = self._rt[rid]
+                rt.tokens.append(tok)
+                if self.collect_hidden and hidden_np is not None:
+                    rt.hiddens.append(hidden_np[s])
+                finished = self.scheduler.note_sampled(rid, tok)
+                self._emit_progress(rid, events, finished)
+                if finished:
+                    self.scheduler.release(rid)
+                    self._rt.pop(rid)
+
+        self.busy_time += time.perf_counter() - t0
+        return events

@@ -1,0 +1,105 @@
+"""Paged KV cache manager (vLLM-style) + SSM state cache.
+
+The page pool is a pair of arrays (L, P, page, nkv, hd); sequences own
+pages through int32 block tables. Allocation is a host-side free list; the
+device arrays are only touched inside the jitted step functions.
+
+SSM stages have no KV: their cache is a constant-size recurrent state per
+slot, managed by ``SlotStateCache`` (DESIGN.md §4 — per-stage cache kind).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class PageAllocator:
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._owned: Dict[int, List[int]] = {}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_owned(self, req_id: int) -> List[int]:
+        return self._owned.get(req_id, [])
+
+    def allocate(self, req_id: int, n: int) -> Optional[List[int]]:
+        if len(self._free) < n:
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(req_id, []).extend(pages)
+        return pages
+
+    def free(self, req_id: int) -> None:
+        pages = self._owned.pop(req_id, [])
+        self._free.extend(pages)
+
+    def check_invariant(self) -> bool:
+        owned = sum(len(v) for v in self._owned.values())
+        in_free = len(self._free)
+        no_dupes = len(set(self._free)) == in_free
+        disjoint = not (set(self._free)
+                        & {p for v in self._owned.values() for p in v})
+        return owned + in_free == self.num_pages and no_dupes and disjoint
+
+
+@dataclass
+class PagedKVConfig:
+    num_pages: int = 128
+    page_size: int = 16
+    max_pages_per_seq: int = 16
+
+    @property
+    def max_seq(self) -> int:
+        return self.page_size * self.max_pages_per_seq
+
+
+def init_kv_pages(cfg: ModelConfig, kv: PagedKVConfig, num_layers: int):
+    dtype = (jnp.int8 if cfg.kv_cache_dtype == "int8"
+             else jnp.dtype(cfg.dtype))
+    shape = (num_layers, kv.num_pages, kv.page_size, cfg.num_kv_heads,
+             cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def init_kv_scale_pages(cfg: ModelConfig, kv: PagedKVConfig,
+                        num_layers: int):
+    shape = (num_layers, kv.num_pages, kv.page_size, cfg.num_kv_heads)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    return -(-tokens // page_size)
+
+
+class BlockTableStore:
+    """Host-side block tables, padded to max_pages_per_seq with 0."""
+
+    def __init__(self, kv: PagedKVConfig):
+        self.kv = kv
+        self.tables: Dict[int, List[int]] = {}
+
+    def set(self, req_id: int, pages: List[int]) -> None:
+        assert len(pages) <= self.kv.max_pages_per_seq, \
+            f"request needs {len(pages)} pages > max_pages_per_seq"
+        self.tables[req_id] = list(pages)
+
+    def extend(self, req_id: int, pages: List[int]) -> None:
+        self.tables.setdefault(req_id, []).extend(pages)
+
+    def row(self, req_id: int) -> np.ndarray:
+        t = self.tables.get(req_id, [])
+        row = np.zeros(self.kv.max_pages_per_seq, np.int32)
+        row[:len(t)] = t
+        return row
+
+    def drop(self, req_id: int) -> None:
+        self.tables.pop(req_id, None)

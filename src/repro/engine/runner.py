@@ -1,0 +1,306 @@
+"""Model runners: the jitted step functions one AR engine executes.
+
+PagedRunner (dense / moe / vlm stages):
+  - ``prefill_chunk``: process C prompt tokens of ONE request, writing their
+    K/V into the request's pages and attending over all its history pages
+    (chunked prefill, Sarathi-style).
+  - ``decode``: batched one-token step for ALL active slots against the
+    shared page pool (vLLM-style paged attention).
+
+StateRunner (ssm / hybrid stages): constant-size recurrent state per slot
+(+ dense KV for the hybrid's shared-attention sites), reusing the
+transformer's prefill/decode paths.
+
+Both runners return final-layer hidden states so stage-transfer functions
+can forward them downstream (e.g. Thinker hidden states → Talker).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.engine.kv_cache import PagedKVConfig, init_kv_pages
+from repro.kernels import ops, ref
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import transformer as T
+
+
+def _mlp_or_moe(cfg, lp, h):
+    if cfg.is_moe:
+        y, _ = moe_mod.moe_forward(cfg, lp["moe"], h)
+        return y
+    return L.mlp(lp["mlp"], h)
+
+
+class PagedRunner:
+    """Paged-KV execution for attention architectures."""
+
+    def __init__(self, cfg: ModelConfig, params, kv: PagedKVConfig):
+        assert cfg.arch_type in ("dense", "moe", "vlm", "audio")
+        self.cfg = cfg
+        self.params = params
+        self.kv = kv
+        self.quant = cfg.kv_cache_dtype == "int8"
+        self.k_pages, self.v_pages = init_kv_pages(cfg, kv, cfg.num_layers)
+        if self.quant:
+            from repro.engine.kv_cache import init_kv_scale_pages
+            self.k_scales, self.v_scales = init_kv_scale_pages(
+                cfg, kv, cfg.num_layers)
+        else:
+            self.k_scales = self.v_scales = None
+        self._prefill_jit = jax.jit(
+            self._prefill_impl, donate_argnums=(1, 2),
+            static_argnames=())
+        self._decode_jit = jax.jit(self._decode_impl, donate_argnums=(1, 2))
+        # host-side copy of the embedding table: avoids retracing an eager
+        # gather for every prompt length (hot path for token->embed lookups)
+        self._embed_np = np.asarray(params["embed"], np.float32)
+
+    # ---- embeds ---------------------------------------------------------
+    def embed(self, tokens: np.ndarray) -> np.ndarray:
+        return self._embed_np[np.asarray(tokens)]
+
+    # ---- prefill chunk ---------------------------------------------------
+    def _prefill_impl(self, params, k_pages, v_pages, k_scales, v_scales,
+                      embeds, block_table, start, valid_len):
+        """embeds: (1, C, d); block_table: (pp,); start, valid_len: scalars.
+        Returns (logits (C,V), hidden (C,d), new page pools...)."""
+        cfg = self.cfg
+        c = embeds.shape[1]
+        page = self.kv.page_size
+        positions = start + jnp.arange(c)[None, :]            # (1, C)
+        window = cfg.sliding_window if cfg.attn_variant == "swa" else 0
+
+        pos_flat = start + jnp.arange(c)
+        pid = jnp.where(pos_flat < start + valid_len,
+                        block_table[pos_flat // page],
+                        self.kv.num_pages)                    # OOB => dropped
+        slot = pos_flat % page
+
+        def body(h, xs):
+            lp, kp, vp, ksp, vsp = xs
+            hn = L.rmsnorm(lp["ln1"], h, cfg.rmsnorm_eps)
+            q, k, v = L._qkv(cfg, lp["attn"], hn)
+            if cfg.rope_theta:
+                q = L.rope(q, positions, cfg.rope_theta)
+                k = L.rope(k, positions, cfg.rope_theta)
+            if self.quant:
+                kq, ks = L.quantize_kv(k)
+                vq, vs = L.quantize_kv(v)
+                kp = kp.at[pid, slot].set(kq[0], mode="drop")
+                vp = vp.at[pid, slot].set(vq[0], mode="drop")
+                ksp = ksp.at[pid, slot].set(ks[0], mode="drop")
+                vsp = vsp.at[pid, slot].set(vs[0], mode="drop")
+                k_all = (kp[block_table].astype(jnp.float32)
+                         * ksp[block_table].astype(jnp.float32)[..., None])
+                v_all = (vp[block_table].astype(jnp.float32)
+                         * vsp[block_table].astype(jnp.float32)[..., None])
+                k_all = k_all.astype(h.dtype)
+                v_all = v_all.astype(h.dtype)
+            else:
+                kp = kp.at[pid, slot].set(k[0], mode="drop")
+                vp = vp.at[pid, slot].set(v[0], mode="drop")
+                k_all, v_all = kp[block_table], vp[block_table]
+            k_all = k_all.reshape(1, -1, cfg.num_kv_heads, cfg.head_dim)
+            v_all = v_all.reshape(1, -1, cfg.num_kv_heads, cfg.head_dim)
+            o = ref.chunk_attention(q, k_all, v_all, start, window=window)
+            h = h + jnp.einsum("bsqh,qhd->bsd", o, lp["attn"]["wo"])
+            hn = L.rmsnorm(lp["ln2"], h, cfg.rmsnorm_eps)
+            h = h + _mlp_or_moe(cfg, lp, hn)
+            return h, (kp, vp, ksp, vsp)
+
+        scales = ((k_scales, v_scales) if self.quant else (None, None))
+        h, (k_pages, v_pages, k_scales, v_scales) = jax.lax.scan(
+            body, embeds, (params["blocks"], k_pages, v_pages, *scales))
+        hidden = h[0]
+        logits = T._unembed(cfg, params, h)[0]
+        return logits, hidden, k_pages, v_pages, k_scales, v_scales
+
+    def prefill_chunk(self, embeds, block_table, start, valid_len):
+        (logits, hidden, self.k_pages, self.v_pages, self.k_scales,
+         self.v_scales) = self._prefill_jit(
+            self.params, self.k_pages, self.v_pages, self.k_scales,
+            self.v_scales, embeds,
+            jnp.asarray(block_table), jnp.asarray(start, jnp.int32),
+            jnp.asarray(valid_len, jnp.int32))
+        return logits, hidden
+
+    # ---- PD disaggregation: KV extraction / injection -------------------
+    def extract_kv(self, block_table, n_tokens: int):
+        """Pull one request's prompt KV out of the page pool.
+
+        Returns (k, v): (L, n_pages*page, nkv, hd) host arrays (trailing
+        padding past n_tokens is zeros) — the payload a prefill stage ships
+        to a decode stage through the unified connector.
+        """
+        page = self.kv.page_size
+        n_pages = -(-n_tokens // page)
+        bt = jnp.asarray(block_table[:n_pages])
+        k = self.k_pages[:, bt]
+        v = self.v_pages[:, bt]
+        if self.quant:
+            # ship full-precision KV (the receiving stage re-quantizes)
+            k = k.astype(jnp.float32) * self.k_scales[:, bt][..., None]
+            v = v.astype(jnp.float32) * self.v_scales[:, bt][..., None]
+        shape = (self.cfg.num_layers, n_pages * page,
+                 self.cfg.num_kv_heads, self.cfg.head_dim)
+        return np.asarray(k.reshape(shape)), np.asarray(v.reshape(shape))
+
+    def inject_kv(self, k_seed, v_seed, block_table, n_tokens: int) -> None:
+        """Write transferred prompt KV into this engine's page pool."""
+        page = self.kv.page_size
+        n_pages = -(-n_tokens // page)
+        pad = n_pages * page - k_seed.shape[1]
+        if pad:
+            padw = [(0, 0), (0, pad), (0, 0), (0, 0)]
+            k_seed = np.pad(k_seed, padw)
+            v_seed = np.pad(v_seed, padw)
+        Ln, _, nkv, hd = k_seed.shape
+        kp = jnp.asarray(k_seed.reshape(Ln, n_pages, page, nkv, hd))
+        vp = jnp.asarray(v_seed.reshape(Ln, n_pages, page, nkv, hd))
+        bt = jnp.asarray(block_table[:n_pages])
+        if self.quant:
+            from repro.models.layers import quantize_kv
+            kq, ks = quantize_kv(kp)
+            vq, vs = quantize_kv(vp)
+            self.k_pages = self.k_pages.at[:, bt].set(kq)
+            self.v_pages = self.v_pages.at[:, bt].set(vq)
+            self.k_scales = self.k_scales.at[:, bt].set(ks)
+            self.v_scales = self.v_scales.at[:, bt].set(vs)
+        else:
+            self.k_pages = self.k_pages.at[:, bt].set(kp.astype(
+                self.k_pages.dtype))
+            self.v_pages = self.v_pages.at[:, bt].set(vp.astype(
+                self.v_pages.dtype))
+
+    # ---- batched decode ---------------------------------------------------
+    def _decode_impl(self, params, k_pages, v_pages, k_scales, v_scales,
+                     embeds, block_tables, positions, active):
+        """embeds: (B,1,d); block_tables: (B,pp); positions: (B,) current
+        token's write position; active: (B,) bool.
+        Returns (logits (B,V), hidden (B,d), new page pools...)."""
+        cfg = self.cfg
+        page = self.kv.page_size
+        window = cfg.sliding_window if cfg.attn_variant == "swa" else 0
+        bidx = jnp.arange(embeds.shape[0])
+        pid = jnp.where(active, block_tables[bidx, positions // page],
+                        self.kv.num_pages)
+        slot = positions % page
+        seq_lens = jnp.where(active, positions + 1, 0)
+
+        def body(h, xs):
+            lp, kp, vp, ksp, vsp = xs
+            hn = L.rmsnorm(lp["ln1"], h, cfg.rmsnorm_eps)
+            q, k, v = L._qkv(cfg, lp["attn"], hn)
+            if cfg.rope_theta:
+                q = L.rope(q, positions[:, None], cfg.rope_theta)
+                k = L.rope(k, positions[:, None], cfg.rope_theta)
+            if self.quant:
+                kq, ks = L.quantize_kv(k)
+                vq, vs = L.quantize_kv(v)
+                kp = kp.at[pid, slot].set(kq[:, 0], mode="drop")
+                vp = vp.at[pid, slot].set(vq[:, 0], mode="drop")
+                ksp = ksp.at[pid, slot].set(ks[:, 0], mode="drop")
+                vsp = vsp.at[pid, slot].set(vs[:, 0], mode="drop")
+            else:
+                kp = kp.at[pid, slot].set(k[:, 0], mode="drop")
+                vp = vp.at[pid, slot].set(v[:, 0], mode="drop")
+            o = ops.paged_attention(q[:, 0], kp, vp, block_tables, seq_lens,
+                                    window=window, k_scale_pages=ksp,
+                                    v_scale_pages=vsp)
+            h = h + jnp.einsum("bqh,qhd->bd", o.astype(h.dtype),
+                               lp["attn"]["wo"])[:, None]
+            hn = L.rmsnorm(lp["ln2"], h, cfg.rmsnorm_eps)
+            h = h + _mlp_or_moe(cfg, lp, hn)
+            return h, (kp, vp, ksp, vsp)
+
+        scales = ((k_scales, v_scales) if self.quant else (None, None))
+        h, (k_pages, v_pages, k_scales, v_scales) = jax.lax.scan(
+            body, embeds, (params["blocks"], k_pages, v_pages, *scales))
+        hidden = h[:, 0]
+        logits = T._unembed(cfg, params, h)[:, 0]
+        return logits, hidden, k_pages, v_pages, k_scales, v_scales
+
+    def decode(self, embeds, block_tables, positions, active):
+        (logits, hidden, self.k_pages, self.v_pages, self.k_scales,
+         self.v_scales) = self._decode_jit(
+            self.params, self.k_pages, self.v_pages, self.k_scales,
+            self.v_scales, embeds,
+            jnp.asarray(block_tables), jnp.asarray(positions),
+            jnp.asarray(active))
+        return logits, hidden
+
+
+class StateRunner:
+    """Recurrent-state execution for SSM / hybrid architectures.
+
+    Slots share batched state arrays; prefill is a single scan per request
+    (SSM prefill has no chunking — the scan IS the prefill), decode is a
+    batched one-token step.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, kv: PagedKVConfig,
+                 max_batch: int):
+        assert cfg.arch_type in ("ssm", "hybrid")
+        self.cfg = cfg
+        self.params = params
+        self.kv = kv
+        self.max_batch = max_batch
+        self.cache = T.init_decode_cache(cfg, max_batch, kv.max_seq)
+        self._prefill_jit = jax.jit(self._prefill_impl)
+        self._insert_jit = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._decode_jit = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._embed_np = np.asarray(params["embed"], np.float32)
+
+    def embed(self, tokens: np.ndarray) -> np.ndarray:
+        return self._embed_np[np.asarray(tokens)]
+
+    def _prefill_impl(self, params, embeds):
+        cfg = self.cfg
+        # reuse transformer prefill on a batch of 1
+        logits, cache1 = _prefill_from_embeds(cfg, params, embeds,
+                                              self.kv.max_seq)
+        hidden = None
+        return logits[0], cache1
+
+    def _insert_impl(self, cache, cache1, slot):
+        def ins(c, c1):
+            return c.at[:, slot].set(c1[:, 0])
+        return jax.tree.map(ins, cache, cache1)
+
+    def prefill(self, embeds, slot):
+        logits, cache1 = self._prefill_jit(self.params, embeds)
+        self.cache = self._insert_jit(self.cache, cache1, slot)
+        return logits, None
+
+    def _decode_impl(self, params, cache, embeds, positions, active):
+        cfg = self.cfg
+        logits, cache = _decode_from_embeds(cfg, params, cache, embeds,
+                                            positions)
+        return logits[:, 0], cache
+
+    def decode(self, embeds, block_tables, positions, active):
+        logits, self.cache = self._decode_jit(
+            self.params, self.cache, embeds, jnp.asarray(positions),
+            jnp.asarray(active))
+        return logits, None
+
+
+# ---- embed-level wrappers around transformer.py (prompts may be embeds) ----
+
+def _prefill_from_embeds(cfg, params, embeds, max_seq):
+    """transformer.forward_prefill but starting from embeddings
+    (treat inputs as precomputed frames so _embed passes them through)."""
+    cfg2 = cfg.replace(modality="audio_frames")
+    return T.forward_prefill(cfg2, params, embeds, max_seq, remat=False)
+
+
+def _decode_from_embeds(cfg, params, cache, embeds, positions):
+    cfg2 = cfg.replace(modality="audio_frames")
+    return T.forward_decode(cfg2, params, cache, embeds, positions)

@@ -1,0 +1,31 @@
+"""Token sampling for AR stages: greedy / temperature / top-k."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    max_new_tokens: int = 32
+    temperature: float = 0.0           # 0 => greedy
+    top_k: int = 0                     # 0 => no top-k filter
+    eos_token: int = -1                # -1 => never stops early
+
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "top_k"))
+def sample_tokens(logits: jax.Array, temperature: float, top_k: int,
+                  key: jax.Array) -> jax.Array:
+    """logits: (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,215 @@
+"""Per-stage scheduler: continuous batching with chunked prefill.
+
+Sarathi-style: every engine step has a token budget shared between decode
+tokens (one per running decode sequence) and prefill chunks; new requests
+are admitted whenever a batch slot and enough KV pages are available.
+Invariants (property-tested in tests/test_scheduler.py):
+  - a slot is owned by at most one request;
+  - page accounting conserves the pool;
+  - FIFO admission (no starvation): waiting requests admit in arrival order;
+  - per-step scheduled tokens <= token_budget (unless a single decode set
+    already exceeds it — decodes are never dropped).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.engine.kv_cache import (BlockTableStore, PageAllocator,
+                                   PagedKVConfig, pages_for)
+from repro.engine.sampling import SamplingParams
+
+
+@dataclass
+class SeqState:
+    req_id: int
+    prompt_len: int
+    sampling: SamplingParams
+    slot: int = -1
+    prefill_done: int = 0              # prompt tokens already processed
+    generated: int = 0
+    pos: int = 0                       # next position to write
+    finished: bool = False
+    resumed: bool = False              # re-prefilling after preemption
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.prefill_done < self.prompt_len
+
+
+@dataclass
+class ScheduledChunk:
+    req_id: int
+    start: int                         # first prompt position in this chunk
+    length: int                        # real tokens in the chunk
+
+
+@dataclass
+class StepPlan:
+    prefill_chunks: List[ScheduledChunk] = field(default_factory=list)
+    decode_req_ids: List[int] = field(default_factory=list)
+    admitted: List[int] = field(default_factory=list)
+    preempted: List[int] = field(default_factory=list)
+
+    @property
+    def total_tokens(self) -> int:
+        return (sum(c.length for c in self.prefill_chunks)
+                + len(self.decode_req_ids))
+
+
+class Scheduler:
+    def __init__(self, kv: PagedKVConfig, max_batch: int,
+                 token_budget: int = 256, chunk_size: int = 64,
+                 enable_preemption: bool = False):
+        self.kv = kv
+        self.max_batch = max_batch
+        self.token_budget = token_budget
+        self.chunk_size = chunk_size
+        self.enable_preemption = enable_preemption
+        self.allocator = PageAllocator(kv.num_pages)
+        self.tables = BlockTableStore(kv)
+        self.waiting: Deque[SeqState] = deque()
+        self.running: Dict[int, SeqState] = {}
+        self._free_slots = list(range(max_batch - 1, -1, -1))
+        self.preemptions = 0
+
+    # ------------------------------------------------------------------
+    def add(self, req_id: int, prompt_len: int,
+            sampling: SamplingParams) -> None:
+        self.waiting.append(SeqState(req_id, prompt_len, sampling))
+
+    def add_prefilled(self, req_id: int, prompt_len: int,
+                      sampling: SamplingParams) -> None:
+        """Admit a request whose prompt KV was computed by a remote prefill
+        stage (PD disaggregation): no prefill chunks are scheduled; the
+        engine injects the transferred KV on admission."""
+        self.waiting.append(SeqState(req_id, prompt_len, sampling,
+                                     prefill_done=prompt_len,
+                                     generated=1, pos=prompt_len))
+
+    def _admission_pages(self, seq: SeqState) -> int:
+        """Pages reserved at admission. With preemption the pool grows
+        incrementally during decode (vLLM-style); without it, the full
+        prompt+max_new worth is reserved upfront so admission can't
+        deadlock mid-decode."""
+        if self.enable_preemption:
+            tokens = seq.prompt_len
+        else:
+            tokens = seq.prompt_len + seq.sampling.max_new_tokens
+        return min(pages_for(tokens, self.kv.page_size),
+                   self.kv.max_pages_per_seq)
+
+    def _try_admit(self, plan: StepPlan) -> None:
+        while self.waiting and self._free_slots:
+            seq = self.waiting[0]
+            pages = self.allocator.allocate(seq.req_id,
+                                            self._admission_pages(seq))
+            if pages is None:
+                break                   # FIFO: don't skip ahead of the head
+            seq.slot = self._free_slots.pop()
+            self.tables.set(seq.req_id, pages)
+            self.running[seq.req_id] = seq
+            plan.admitted.append(seq.req_id)
+            self.waiting.popleft()
+
+    def _preempt(self, victim: SeqState, plan: StepPlan) -> None:
+        """Recompute-mode preemption: free the victim's pages + slot and
+        push it to the front of the waiting queue for re-prefill."""
+        rid = victim.req_id
+        self.running.pop(rid)
+        self.allocator.free(rid)
+        self.tables.drop(rid)
+        self._free_slots.append(victim.slot)
+        plan.preempted.append(rid)
+        # reset for recompute: generated tokens (minus the last sampled one,
+        # whose KV was never written) join the prompt; the engine extends
+        # the prompt embeddings and skips the prefill-completion sample
+        victim.slot = -1
+        victim.prefill_done = 0
+        victim.pos = 0
+        if victim.generated >= 1:
+            victim.prompt_len += victim.generated - 1
+            victim.resumed = True
+        self.waiting.appendleft(victim)
+        self.preemptions += 1
+
+    def _ensure_decode_capacity(self, plan: StepPlan) -> None:
+        """Incremental page growth for running decodes; on OOM, preempt the
+        youngest running request so the oldest always makes progress
+        (age-ordered eviction can't thrash)."""
+        for seq in sorted(self.running.values(), key=lambda s: s.req_id):
+            if seq.req_id not in self.running or seq.finished \
+                    or seq.in_prefill:
+                continue
+            while (pages_for(seq.pos + 1, self.kv.page_size)
+                   > len(self.allocator.pages_owned(seq.req_id))):
+                got = self.allocator.allocate(seq.req_id, 1)
+                if got is not None:
+                    self.tables.extend(seq.req_id, got)
+                    continue
+                victims = [s for s in self.running.values()
+                           if not s.finished and s.req_id > seq.req_id]
+                if victims:
+                    self._preempt(max(victims, key=lambda s: s.req_id), plan)
+                else:
+                    self._preempt(seq, plan)     # evict itself; retry later
+                    break
+
+    def schedule(self) -> StepPlan:
+        """Plan one engine step."""
+        plan = StepPlan()
+        self._try_admit(plan)
+        if self.enable_preemption:
+            self._ensure_decode_capacity(plan)
+        budget = self.token_budget
+        # decodes first (latency-critical; never dropped)
+        for seq in self.running.values():
+            if not seq.in_prefill and not seq.finished:
+                plan.decode_req_ids.append(seq.req_id)
+        budget -= len(plan.decode_req_ids)
+        # prefill chunks with the remaining budget
+        for seq in self.running.values():
+            if budget <= 0:
+                break
+            if seq.in_prefill:
+                n = min(self.chunk_size, seq.prompt_len - seq.prefill_done,
+                        max(budget, 0))
+                if n > 0:
+                    plan.prefill_chunks.append(
+                        ScheduledChunk(seq.req_id, seq.prefill_done, n))
+                    budget -= n
+        return plan
+
+    # ------------------------------------------------------------------
+    def note_prefill(self, req_id: int, n: int) -> None:
+        seq = self.running[req_id]
+        seq.prefill_done += n
+        seq.pos = seq.prefill_done      # pos = #tokens whose KV is written
+
+    def note_decode_written(self, req_id: int) -> None:
+        """One decode step wrote this request's current token KV at seq.pos."""
+        self.running[req_id].pos += 1
+
+    def note_sampled(self, req_id: int, token: int) -> bool:
+        """Record one sampled token; returns True if the request finished."""
+        seq = self.running[req_id]
+        seq.generated += 1
+        sp = seq.sampling
+        if (seq.generated >= sp.max_new_tokens
+                or (sp.eos_token >= 0 and token == sp.eos_token)
+                or seq.pos + 1 >= self.kv.max_seq):
+            seq.finished = True
+        return seq.finished
+
+    def release(self, req_id: int) -> None:
+        seq = self.running.pop(req_id)
+        self.allocator.free(req_id)
+        self.tables.drop(req_id)
+        self._free_slots.append(seq.slot)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.running)

@@ -1,0 +1,95 @@
+"""Pallas TPU Mamba1 selective scan.
+
+TPU-native design notes:
+  - The CUDA selective-scan kernel parallelizes over channels with one
+    thread block per (batch, channel-chunk) and scans sequentially in
+    registers. On TPU we tile channels into (BD,) VMEM blocks (BD a
+    multiple of 128 lanes) and make the sequence-chunk axis the LAST
+    (sequential) grid dimension; the recurrent state h (BD, n) persists in
+    VMEM scratch across sequence chunks.
+  - Within a chunk the recurrence is a lax.fori_loop over BS timesteps on
+    (BD, n) VREG tiles — elementwise VPU work; the state never round-trips
+    to HBM (the GPU version's shared-memory trick, done with VMEM scratch).
+
+Validated against kernels/ref.py (interpret=True) in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                 y_ref, hout_ref, h_ref, *, bs: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    A = a_ref[...].astype(jnp.float32)            # (BD, n)
+    D = d_ref[...].astype(jnp.float32)            # (1, BD)
+
+    def step(t, _):
+        xt = x_ref[0, t].astype(jnp.float32)      # (BD,)
+        dtt = dt_ref[0, t].astype(jnp.float32)    # (BD,)
+        Bt = b_ref[0, t].astype(jnp.float32)      # (n,)
+        Ct = c_ref[0, t].astype(jnp.float32)      # (n,)
+        h = h_ref[...]
+        dA = jnp.exp(dtt[:, None] * A)            # (BD, n)
+        h = dA * h + (dtt * xt)[:, None] * Bt[None, :]
+        h_ref[...] = h
+        y = jnp.sum(h * Ct[None, :], axis=-1) + D[0] * xt
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, bs, step, 0)
+
+    @pl.when(si == pl.num_programs(2) - 1)
+    def _emit_state():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bs", "interpret"))
+def mamba1_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, D: jax.Array, h0: jax.Array | None = None, *,
+                bd: int = 256, bs: int = 64, interpret: bool = False):
+    """x, dt: (Bt, S, di); A: (di, n); B, C: (Bt, S, n); D: (di,).
+    Returns (y (Bt,S,di) fp32-accurate, h_last (Bt,di,n) f32)."""
+    bt, s, di = x.shape
+    n = A.shape[1]
+    bd = min(bd, di)
+    bs = min(bs, s)
+    assert di % bd == 0 and s % bs == 0
+    if h0 is None:
+        h0 = jnp.zeros((bt, di, n), jnp.float32)
+
+    grid = (bt, di // bd, s // bs)
+    y, h = pl.pallas_call(
+        functools.partial(_scan_kernel, bs=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b_, d_, s_: (b_, s_, d_)),  # x
+            pl.BlockSpec((1, bs, bd), lambda b_, d_, s_: (b_, s_, d_)),  # dt
+            pl.BlockSpec((bd, n), lambda b_, d_, s_: (d_, 0)),           # A
+            pl.BlockSpec((1, bs, n), lambda b_, d_, s_: (b_, s_, 0)),    # B
+            pl.BlockSpec((1, bs, n), lambda b_, d_, s_: (b_, s_, 0)),    # C
+            pl.BlockSpec((1, bd), lambda b_, d_, s_: (0, d_)),           # D
+            pl.BlockSpec((1, bd, n), lambda b_, d_, s_: (b_, d_, 0)),    # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b_, d_, s_: (b_, s_, d_)),  # y
+            pl.BlockSpec((1, bd, n), lambda b_, d_, s_: (b_, d_, 0)),    # h
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt, s, di), x.dtype),
+            jax.ShapeDtypeStruct((bt, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D.reshape(1, di), h0)
+    return y, h

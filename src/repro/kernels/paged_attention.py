@@ -1,0 +1,145 @@
+"""Pallas TPU paged attention (single-token decode over a block-paged KV
+cache) — the TPU adaptation of vLLM's PagedAttention CUDA kernel.
+
+TPU-native design notes:
+  - The GPU kernel assigns a warp per page and reduces in shared memory.
+    On TPU we instead make the page axis the LAST (sequential) grid
+    dimension and carry the online-softmax state in VMEM scratch — same
+    dataflow, systolic-friendly.
+  - Page indirection uses PrefetchScalarGridSpec: ``block_tables`` and
+    ``seq_lens`` are scalar-prefetch operands, so each grid step's
+    BlockSpec index_map dereferences the page id *before* the DMA is
+    issued — the TPU equivalent of the GPU kernel's pointer chasing, with
+    the DMA engine doing the gather.
+  - Pages are (page_size, head_dim) tiles; page_size is a multiple of 8
+    (sublane) and head_dim a multiple of 128 lanes for aligned VMEM tiles.
+  - GQA: all g query heads of one kv head are processed together as the
+    rows of a (g, hd) MXU tile.
+
+Validated against kernels/ref.py (interpret=True) in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -2.0 ** 30
+
+
+def _pa_kernel(block_tables_ref, seq_lens_ref,  # scalar prefetch
+               q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *,
+               page: int, window: int, ks_ref=None, vs_ref=None):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (g, hd) — pre-scaled
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (page, hd)
+    if ks_ref is not None:
+        # int8 page pool: dequantize in-VMEM (HBM traffic stays 1 B/elem)
+        k = k * ks_ref[0, :, 0][:, None].astype(jnp.float32)
+    s = q @ k.T                                          # (g, page)
+
+    seq_len = seq_lens_ref[b]
+    tok = pi * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = tok < seq_len
+    if window > 0:
+        mask &= tok > seq_len - 1 - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    if vs_ref is not None:
+        v = v * vs_ref[0, :, 0][:, None].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(pi == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _pa_kernel_quant(bt_ref, sl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                     o_ref, m_ref, l_ref, acc_ref, *, page, window):
+    _pa_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+               acc_ref, page=page, window=window, ks_ref=ks_ref,
+               vs_ref=vs_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, seq_lens: jax.Array, *,
+                    k_scale_pages: jax.Array | None = None,
+                    v_scale_pages: jax.Array | None = None,
+                    window: int = 0, interpret: bool = False) -> jax.Array:
+    """q: (B, nq, hd); k/v_pages: (P, page, nkv, hd);
+    block_tables: (B, pages_per_seq) int32; seq_lens: (B,) int32.
+    Optional k/v_scale_pages: (P, page, nkv) f32 — int8-quantized pool with
+    in-kernel dequantization. Returns (B, nq, hd)."""
+    b, nq, hd = q.shape
+    num_pages, page, nkv, _ = k_pages.shape
+    pp = block_tables.shape[1]
+    g = nq // nkv
+    scale = hd ** -0.5
+    quant = k_scale_pages is not None
+
+    # (B, nkv, g, hd) so each kv head's query group is one tile
+    qg = (q * scale).reshape(b, nkv, g, hd)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd),
+                     lambda b_, h, p, bt, sl: (b_, h, 0, 0)),
+        # dereference the page id from the prefetched block table
+        pl.BlockSpec((1, page, 1, hd),
+                     lambda b_, h, p, bt, sl: (bt[b_, p], 0, h, 0)),
+        pl.BlockSpec((1, page, 1, hd),
+                     lambda b_, h, p, bt, sl: (bt[b_, p], 0, h, 0)),
+    ]
+    operands = [block_tables, seq_lens, qg, k_pages, v_pages]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, page, 1),
+                         lambda b_, h, p, bt, sl: (bt[b_, p], 0, h)),
+            pl.BlockSpec((1, page, 1),
+                         lambda b_, h, p, bt, sl: (bt[b_, p], 0, h)),
+        ]
+        operands += [k_scale_pages, v_scale_pages]
+        kernel = functools.partial(_pa_kernel_quant, page=page,
+                                   window=window)
+    else:
+        kernel = functools.partial(_pa_kernel, page=page, window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nkv, pp),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b_, h, p, bt, sl: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(b, nq, hd)

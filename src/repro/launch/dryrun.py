@@ -1,0 +1,351 @@
+"""Multi-pod dry-run: prove every (arch x shape x mesh) lowers + compiles.
+
+Usage (each invocation is a fresh process so the forced device count holds):
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_5_14b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Writes one JSON per combo with cost_analysis / memory_analysis / collective
+byte counts parsed from the partitioned HLO — the roofline inputs.
+"""
+# The forced host device count MUST precede any jax import (device count is
+# locked at first init). Keep these the first two lines of the module.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, ModelConfig,
+                                ShapeConfig, get_config, shape_skips,
+                                variant_for_shape)
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.sharding import specs as S
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.step import make_train_step
+
+_COLL_RE = re.compile(
+    r"(\w+)\[([0-9,]*)\][^ ]* (all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-tensor bytes of collectives in the partitioned HLO,
+    multiplying ops inside while-loop bodies by the loop trip count
+    (XLA's own cost analysis counts loop bodies once — verified — so a
+    per-computation walk with trip-count multipliers is required for
+    scan-over-layers / scan-over-sequence models)."""
+    # --- split into computations ---------------------------------------
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+        elif cur is not None:
+            comps[cur].append(line)
+
+    # --- per-computation collective bytes + while edges -----------------
+    bytes_by_comp: dict[str, dict] = {}
+    while_edges: dict[str, list] = {}            # comp -> [(cond, body)]
+    trip_of_cond: dict[str, int] = {}
+    for name, lines in comps.items():
+        per = {}
+        edges = []
+        consts = []
+        for line in lines:
+            for m in _COLL_RE.finditer(line):
+                dtype, shape, op = m.group(1), m.group(2), m.group(3)
+                nb = _DTYPE_BYTES.get(dtype, 4)
+                for d in shape.split(","):
+                    if d:
+                        nb *= int(d)
+                per[op] = per.get(op, 0) + nb
+            w = _WHILE_RE.search(line)
+            if w:
+                edges.append((w.group(1), w.group(2)))
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+        bytes_by_comp[name] = per
+        while_edges[name] = edges
+        if consts:
+            trip_of_cond[name] = max(consts)     # heuristic: loop bound
+
+    # --- propagate multipliers from ENTRY --------------------------------
+    mult = {name: 0.0 for name in comps}
+    if entry:
+        mult[entry] = 1.0
+    for _ in range(len(comps)):                  # fixpoint (call DAG)
+        changed = False
+        for name, edges in while_edges.items():
+            if mult.get(name, 0.0) <= 0:
+                continue
+            for cond, body in edges:
+                trips = trip_of_cond.get(cond, 1)
+                want = mult[name] * max(1, trips)
+                if body in mult and mult[body] < want:
+                    mult[body] = want
+                    changed = True
+        if not changed:
+            break
+
+    out = {}
+    raw = {}
+    for name, per in bytes_by_comp.items():
+        scale = mult.get(name, 0.0)
+        if scale <= 0 and per:
+            scale = 1.0                          # unreached? count once
+        for op, nb in per.items():
+            out[op] = out.get(op, 0) + nb * scale
+            out["total"] = out.get("total", 0) + nb * scale
+            raw[op] = raw.get(op, 0) + nb
+            raw["total"] = raw.get("total", 0) + nb
+    out["uncorrected_total"] = raw.get("total", 0)
+    return out
+
+
+def opt_specs(params_tpl, pspecs, mesh):
+    """ZeRO-ish optimizer-state sharding: additionally shard the stacked
+    layer dim (or first unsharded dim divisible by the data axis) over
+    "data". Beyond-paper optimization; cuts opt-state memory 16x."""
+    dsize = mesh.shape["data"]
+
+    def f(tpl, spec):
+        parts = list(spec) + [None] * (tpl.ndim - len(spec))
+        for i, (dim, p) in enumerate(zip(tpl.shape, parts)):
+            if p is None and dim % dsize == 0 and dim > 0:
+                parts[i] = "data"
+                break
+        return P(*parts)
+
+    return jax.tree.map(f, params_tpl, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, Ssz = shape.global_batch, shape.seq_len
+    tok_spec = S.token_specs(cfg, mesh, B)
+    shard = lambda sp: NamedSharding(mesh, sp)
+    if cfg.modality == "audio_frames":
+        tok = jax.ShapeDtypeStruct((B, Ssz, cfg.d_model), jnp.bfloat16,
+                                   sharding=shard(tok_spec))
+    else:
+        tok = jax.ShapeDtypeStruct((B, Ssz), jnp.int32,
+                                   sharding=shard(tok_spec))
+    if shape.kind == "train":
+        lbl = jax.ShapeDtypeStruct((B, Ssz), jnp.int32,
+                                   sharding=shard(P(*tok_spec[:2])
+                                                  if len(tok_spec) > 1
+                                                  else tok_spec))
+        return {"inputs": tok, "labels": lbl}
+    if shape.kind == "prefill":
+        return {"inputs": tok}
+    # decode: one token per sequence + full cache
+    if cfg.modality == "audio_frames":
+        one = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16,
+                                   sharding=shard(tok_spec))
+    else:
+        one = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                   sharding=shard(P(tok_spec[0], None)))
+    return {"tokens": one}
+
+
+def _sds(tree, mesh, spec_tree):
+    """Attach shardings to an eval_shape pytree (specs re-fitted to shapes)."""
+    return jax.tree.map(
+        lambda t, sp: jax.ShapeDtypeStruct(
+            t.shape, t.dtype,
+            sharding=NamedSharding(mesh, S.fit_spec(mesh, t.shape, sp))),
+        tree, spec_tree)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, remat="full",
+               zero_opt: bool = True):
+    """Returns (fn, example_args as ShapeDtypeStructs, in_shardings)."""
+    key = jax.random.PRNGKey(0)
+    params_tpl = jax.eval_shape(lambda: T.init_params(cfg, key))
+    pspecs = S.param_specs(cfg, params_tpl, mesh)
+    params_sds = _sds(params_tpl, mesh, pspecs)
+    ins = input_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        opt_tpl = jax.eval_shape(lambda: init_opt_state(params_tpl))
+        osp = (opt_specs(params_tpl, pspecs, mesh) if zero_opt else pspecs)
+        ospecs = {"mu": osp, "nu": osp, "step": P()}
+        opt_sds = _sds(opt_tpl, mesh, ospecs)
+        step = make_train_step(cfg, AdamWConfig(),
+                               remat="dots" if remat == "dots" else True)
+        args = (params_sds, opt_sds, ins["inputs"], ins["labels"])
+        return step, args
+
+    if shape.kind == "prefill":
+        def serve_prefill(params, inputs):
+            logits, cache = T.forward_prefill(cfg, params, inputs,
+                                              shape.seq_len, remat=True)
+            return logits[:, -1], cache
+        return serve_prefill, (params_sds, ins["inputs"])
+
+    # decode
+    cache_tpl = jax.eval_shape(
+        lambda: T.init_decode_cache(cfg, shape.global_batch, shape.seq_len))
+    cspecs_d = S.kv_cache_specs(cfg, mesh, shape.global_batch)
+    cspecs = {k: cspecs_d[k] for k in cache_tpl}
+    cache_sds = _sds(cache_tpl, mesh, cspecs)
+
+    def serve_decode(params, cache, tokens):
+        pos = jnp.full((shape.global_batch,), shape.seq_len - 1, jnp.int32)
+        logits, cache = T.forward_decode(cfg, params, cache, tokens, pos)
+        return logits, cache
+    return serve_decode, (params_sds, cache_sds, ins["tokens"])
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+            moe_impl: str = "gspmd", tag_suffix: str = "",
+            pad_heads: int = 0, mesh_shape: str = "",
+            kv_dtype: str = "", remat: str = "full",
+            zero_opt: bool = True) -> dict:
+    from repro.sharding.context import DistContext, distribution
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    skip = shape_skips(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": mesh_shape or ("2x16x16" if multi_pod else "16x16")}
+    if moe_impl != "gspmd":
+        rec["moe_impl"] = moe_impl
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        if outdir:
+            os.makedirs(outdir, exist_ok=True)
+            tag = (f"{arch}__{shape_name}__{rec['mesh'].replace('x', '_')}"
+                   + tag_suffix)
+            with open(os.path.join(outdir, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+    cfg = variant_for_shape(cfg, shape)
+    rec["attn_variant"] = cfg.attn_variant
+    if kv_dtype:
+        cfg = cfg.replace(kv_cache_dtype=kv_dtype)
+        rec["kv_cache_dtype"] = kv_dtype
+    if remat != "full":
+        rec["remat"] = remat
+    if pad_heads:
+        # physical head padding (§Perf): round q/kv head counts up to a
+        # multiple of the model-axis size so heads shard evenly (padded
+        # heads have zero output rows — a layout change, not a model change)
+        up = lambda n: -(-n // pad_heads) * pad_heads
+        rec["padded_heads"] = [up(cfg.num_heads), up(cfg.num_kv_heads)]
+        cfg = cfg.replace(num_heads=up(cfg.num_heads),
+                          num_kv_heads=up(cfg.num_kv_heads))
+    if mesh_shape:
+        # alternative factorization of the same chip count (§Perf),
+        # e.g. "32,8" = 256 chips with model=8 so 40 heads shard evenly
+        dims = tuple(int(x) for x in mesh_shape.split(","))
+        axes = ("pod", "data", "model")[-len(dims):]
+        mesh = jax.make_mesh(dims, axes)
+        dp = axes[:-1]
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        dp = ("pod", "data") if multi_pod else ("data",)
+    ctx = DistContext(mesh=mesh, data_axes=dp, moe_impl=moe_impl)
+    t0 = time.time()
+    try:
+        fn, args = build_step(cfg, shape, mesh, remat=remat,
+                              zero_opt=zero_opt)
+        with distribution(ctx), mesh:
+            lowered = jax.jit(fn).lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        try:
+            ca = compiled.cost_analysis()
+            rec["flops"] = float(ca.get("flops", -1))
+            rec["bytes"] = float(ca.get("bytes accessed", -1))
+        except Exception as e:  # pragma: no cover
+            rec["cost_analysis_error"] = str(e)
+        try:
+            ma = compiled.memory_analysis()
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                if hasattr(ma, f):
+                    rec[f] = int(getattr(ma, f))
+        except Exception as e:  # pragma: no cover
+            rec["memory_analysis_error"] = str(e)
+        try:
+            rec["collective_bytes"] = collective_bytes(compiled.as_text())
+        except Exception:
+            rec["collective_bytes"] = collective_bytes(lowered.as_text())
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        tag = (f"{arch}__{shape_name}__{rec['mesh'].replace('x', '_')}"
+               + tag_suffix)
+        with open(os.path.join(outdir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--moe", default="gspmd", choices=["gspmd", "ep"])
+    ap.add_argument("--tag", default="", help="suffix for the output json")
+    ap.add_argument("--pad-heads", type=int, default=0,
+                    help="round head counts up to this multiple")
+    ap.add_argument("--mesh-shape", default="",
+                    help="override mesh factorization, e.g. 32,8")
+    ap.add_argument("--kv-dtype", default="", choices=["", "int8"])
+    ap.add_argument("--remat", default="full", choices=["full", "dots"])
+    ap.add_argument("--no-zero", action="store_true",
+                    help="disable ZeRO optimizer-state sharding")
+    args = ap.parse_args()
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        combos.append((args.arch, args.shape))
+    for a, s in combos:
+        rec = run_one(a, s, args.multi_pod, args.out, moe_impl=args.moe,
+                      tag_suffix=args.tag, pad_heads=args.pad_heads,
+                      mesh_shape=args.mesh_shape, kv_dtype=args.kv_dtype,
+                      remat=args.remat, zero_opt=not args.no_zero)
+        brief = {k: v for k, v in rec.items() if k != "traceback"}
+        print(json.dumps(brief))
+
+
+if __name__ == "__main__":
+    main()

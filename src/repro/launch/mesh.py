@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips (TPU v5e pod), axes ("data", "model").
+Multi-pod: 2x16x16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis crosses DCN; the dry-run proves it shards.
+
+Defined as functions so importing this module never touches jax device
+state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_stage_submesh(mesh, axis: str, lo: int, hi: int):
+    """Carve a stage submesh out of the global mesh along one axis
+    (per-stage accelerator allocation, paper §3.3): devices [lo, hi) of
+    ``axis`` become the stage's own mesh with the same axis names."""
+    from jax.sharding import Mesh
+    devs = mesh.devices
+    idx = mesh.axis_names.index(axis)
+    sl = [slice(None)] * devs.ndim
+    sl[idx] = slice(lo, hi)
+    return Mesh(devs[tuple(sl)], mesh.axis_names)
+
+
+# TPU v5e hardware constants (roofline):
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

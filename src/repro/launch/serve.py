@@ -1,0 +1,102 @@
+"""Serving launcher.
+
+Two modes:
+  - pipeline: serve an any-to-any stage-graph pipeline (the paper's case)
+      PYTHONPATH=src python -m repro.launch.serve --pipeline qwen_omni \
+          --requests 8 --max-batch 4
+  - single:   serve one assigned architecture (smoke-scale) as a 1-stage graph
+      PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b \
+          --requests 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.configs.pipelines import _kv, build_ar_dit, build_mimo_audio, \
+    build_qwen_omni
+from repro.core.graph import StageGraph
+from repro.core.orchestrator import Orchestrator
+from repro.core.request import Request
+from repro.core.stage import StageSpec
+from repro.engine.ar_engine import AREngine
+from repro.engine.sampling import SamplingParams
+from repro.models import transformer as T
+
+
+def build_single_arch(arch: str, max_batch: int, max_new: int, seed: int = 0):
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    eng = AREngine(arch, cfg, params, kv=_kv(max_batch), max_batch=max_batch,
+                   default_sampling=SamplingParams(max_new_tokens=max_new,
+                                                   temperature=0.8, top_k=20))
+    graph = StageGraph()
+    graph.add_stage(StageSpec(arch, "ar", is_output=True))
+    return graph, {arch: eng}, {"cfg": cfg}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pipeline", default=None,
+                    choices=[None, "qwen_omni", "qwen3_omni", "glm_image",
+                             "mimo_audio", "pd"])
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.pipeline == "qwen_omni":
+        graph, engines, _ = build_qwen_omni(max_batch=args.max_batch)
+    elif args.pipeline == "qwen3_omni":
+        graph, engines, _ = build_qwen_omni(max_batch=args.max_batch,
+                                            vocoder_kind="cnn")
+    elif args.pipeline == "glm_image":
+        graph, engines, _ = build_ar_dit("glm_image",
+                                         max_batch=args.max_batch)
+    elif args.pipeline == "mimo_audio":
+        graph, engines, _ = build_mimo_audio(max_batch=args.max_batch)
+    elif args.pipeline == "pd":
+        from repro.configs.pipelines import build_pd_disaggregated
+        graph, engines, _ = build_pd_disaggregated(
+            max_batch=args.max_batch, max_new=args.max_new)
+    elif args.arch:
+        graph, engines, _ = build_single_arch(args.arch, args.max_batch,
+                                              args.max_new, args.seed)
+    else:
+        ap.error("pass --pipeline or --arch")
+
+    orch = Orchestrator(graph, engines)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    reqs = []
+    for _ in range(args.requests):
+        if args.pipeline == "mimo_audio":
+            inputs = {"audio": rng.standard_normal((32, 16)).astype(np.float32)}
+        else:
+            inputs = {"tokens": rng.integers(0, 200, size=int(
+                rng.integers(6, 24))).astype(np.int32)}
+        reqs.append(Request(inputs=inputs))
+        orch.submit(reqs[-1])
+    done = orch.run()
+    wall = time.perf_counter() - t0
+    from repro.core.metrics import summarize
+    m = summarize(reqs, wall_time=wall)
+    print(f"completed {len(done)}/{args.requests} requests "
+          f"in {wall:.2f}s  ({m['req_per_s']:.2f} req/s)")
+    print(f"JCT p50={m['jct_p50']:.3f}s p95={m['jct_p95']:.3f}s  "
+          f"TTFT p50={m['ttft_p50']:.3f}s")
+    print("stage busy:", {k: round(v, 3)
+                          for k, v in orch.stage_busy_times().items()})
+    for kind, st in orch.connector_stats().items():
+        print(f"connector[{kind}]: {st.calls} transfers, {st.bytes} bytes, "
+              f"{st.wall_time*1e3:.2f} ms wall")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,226 @@
+"""Core neural layers shared by every architecture: RMSNorm, RoPE, GQA
+attention (full / sliding-window / decode-with-cache), SwiGLU MLP.
+
+Everything is functional: ``init_*`` builds a param pytree, ``apply_*``
+consumes it. Params are plain nested dicts of jnp arrays so they stack
+cleanly over layers for ``lax.scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / np.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# RMSNorm
+# ----------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * p["scale"]
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embeddings.
+
+    x: (..., S, H, hd); positions: broadcastable to (..., S). Uses the
+    split-half convention (matches most open-weight LLMs).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Attention (GQA, optional bias / sliding window / encoder-bidirectional)
+# ----------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, nq, hd), d, dtype),
+        "wk": _dense_init(ks[1], (d, nkv, hd), d, dtype),
+        "wv": _dense_init(ks[2], (d, nkv, hd), d, dtype),
+        "wo": _dense_init(ks[3], (nq, hd, d), nq * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq, hd), dtype)
+        p["bk"] = jnp.zeros((nkv, hd), dtype)
+        p["bv"] = jnp.zeros((nkv, hd), dtype)
+    return p
+
+
+def _qkv(cfg: ModelConfig, p: dict, x: jax.Array):
+    q = jnp.einsum("bsd,dqh->bsqh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def attention_full(cfg: ModelConfig, p: dict, x: jax.Array,
+                   positions: jax.Array, causal: bool = True) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder)."""
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.head_dim and cfg.rope_theta and not cfg.is_encoder:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    window = cfg.sliding_window if cfg.attn_variant == "swa" else 0
+    o = ops.flash_attention(q, k, v, causal=causal, window=window)
+    return jnp.einsum("bsqh,qhd->bsd", o, p["wo"])
+
+
+def quantize_kv(x: jax.Array):
+    """Per-(token, head) int8 symmetric quantization.
+
+    x: (..., hd) -> (int8 (..., hd), scale (...,) f32).
+    """
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attention_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None):
+    """One-token decode against a dense KV cache.
+
+    x: (B, 1, d); pos: scalar or (B,) current position; caches (B, S, nkv, hd).
+    With cfg.kv_cache_dtype == "int8", caches are int8 and k_scale/v_scale
+    hold the (B, S, nkv) dequant scales.
+    Returns (out (B,1,d), new caches...) — scales returned iff quantized.
+    """
+    q, k, v = _qkv(cfg, p, x)  # q (B,1,nq,hd), k/v (B,1,nkv,hd)
+    posb = jnp.broadcast_to(jnp.asarray(pos), (x.shape[0],))  # (B,)
+    if cfg.head_dim and cfg.rope_theta:
+        q = rope(q, posb[:, None], cfg.rope_theta)
+        k = rope(k, posb[:, None], cfg.rope_theta)
+    bidx = jnp.arange(x.shape[0])
+    S = k_cache.shape[1]
+    window = cfg.sliding_window if cfg.attn_variant == "swa" else 0
+    # Ring-buffer SWA cache: when the cache holds only `window` columns
+    # (init_decode_cache sizes SWA caches to the window), writes wrap and
+    # column j holds absolute position pos - ((pos - j) mod S).
+    ring = bool(window) and S == window
+    write_idx = posb % S if ring else posb
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k_cache = k_cache.at[bidx, write_idx].set(kq[:, 0])
+        v_cache = v_cache.at[bidx, write_idx].set(vq[:, 0])
+        k_scale = k_scale.at[bidx, write_idx].set(ks[:, 0])
+        v_scale = v_scale.at[bidx, write_idx].set(vs[:, 0])
+    else:
+        k_cache = k_cache.at[bidx, write_idx].set(k[:, 0])
+        v_cache = v_cache.at[bidx, write_idx].set(v[:, 0])
+    key_positions = None
+    if ring:
+        j = jnp.arange(S)[None, :]
+        key_positions = posb[:, None] - ((posb[:, None] - j) % S)
+    o = ops.decode_attention(q, k_cache, v_cache, posb, window=window,
+                             k_scale=k_scale, v_scale=v_scale,
+                             key_positions=key_positions)
+    out = jnp.einsum("bsqh,qhd->bsd", o.astype(x.dtype), p["wo"])
+    return out, k_cache, v_cache, k_scale, v_scale
+
+
+# ----------------------------------------------------------------------------
+# SwiGLU MLP
+# ----------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": _dense_init(ks[0], (d, f), d, dtype),
+        "wu": _dense_init(ks[1], (d, f), d, dtype),
+        "wd": _dense_init(ks[2], (f, d), f, dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    return h @ p["wd"]
+
+
+# ----------------------------------------------------------------------------
+# Transformer block (attention + MLP/MoE), pre-norm
+# ----------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, key) -> dict:
+    from repro.models import moe as moe_mod
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": init_rmsnorm(cfg.d_model, jnp.dtype(cfg.dtype)),
+        "attn": init_attention(cfg, ks[0]),
+        "ln2": init_rmsnorm(cfg.d_model, jnp.dtype(cfg.dtype)),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_mod.init_moe(cfg, ks[1])
+    else:
+        p["mlp"] = init_mlp(cfg, ks[1])
+    return p
+
+
+def block_full(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+               causal: bool = True):
+    """Full-seq transformer block. Returns (x, aux_loss)."""
+    from repro.models import moe as moe_mod
+    x = x + attention_full(cfg, p["attn"], rmsnorm(p["ln1"], x, cfg.rmsnorm_eps),
+                           positions, causal=causal)
+    h = rmsnorm(p["ln2"], x, cfg.rmsnorm_eps)
+    if cfg.is_moe:
+        y, aux = moe_mod.moe_forward(cfg, p["moe"], h)
+    else:
+        y, aux = mlp(p["mlp"], h), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def block_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
+                 k_cache: jax.Array, v_cache: jax.Array,
+                 k_scale: jax.Array | None = None,
+                 v_scale: jax.Array | None = None):
+    from repro.models import moe as moe_mod
+    a, k_cache, v_cache, k_scale, v_scale = attention_decode(
+        cfg, p["attn"], rmsnorm(p["ln1"], x, cfg.rmsnorm_eps), pos,
+        k_cache, v_cache, k_scale, v_scale)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.rmsnorm_eps)
+    if cfg.is_moe:
+        y, _ = moe_mod.moe_forward(cfg, p["moe"], h)
+    else:
+        y = mlp(p["mlp"], h)
+    return x + y, k_cache, v_cache, k_scale, v_scale

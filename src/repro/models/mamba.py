@@ -1,0 +1,142 @@
+"""Mamba blocks: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2).
+
+Full-sequence (train / prefill) and single-token decode paths. The decode
+"KV cache" of an SSM layer is a constant-size recurrent state — the engine's
+per-stage cache manager swaps paged-KV for this (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import _dense_init, init_rmsnorm, rmsnorm
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def mamba2_head_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner // (cfg.ssm_heads or max(1, cfg.d_inner // 64))
+
+
+def n_heads2(cfg: ModelConfig) -> int:
+    return cfg.ssm_heads or max(1, cfg.d_inner // 64)
+
+
+def init_mamba(cfg: ModelConfig, key) -> dict:
+    d, di, n, cw = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p = {"ln": init_rmsnorm(d, dtype)}
+    if cfg.ssm_version == 1:
+        r = dt_rank(cfg)
+        p.update({
+            "in_proj": _dense_init(ks[0], (d, 2 * di), d, dtype),
+            "conv_w": _dense_init(ks[1], (cw, di), cw, dtype),
+            "conv_b": jnp.zeros((di,), dtype),
+            "x_proj": _dense_init(ks[2], (di, r + 2 * n), di, dtype),
+            "dt_proj": _dense_init(ks[3], (r, di), r, dtype),
+            "dt_bias": jnp.full((di,), -4.0, jnp.float32),  # softplus ~ small dt
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+            "D": jnp.ones((di,), jnp.float32),
+            "out_proj": _dense_init(ks[4], (di, d), di, dtype),
+        })
+    else:
+        nh = n_heads2(cfg)
+        conv_ch = di + 2 * n
+        p.update({
+            # in_proj -> [z (di), x (di), B (n), C (n), dt (nh)]
+            "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * n + nh), d, dtype),
+            "conv_w": _dense_init(ks[1], (cw, conv_ch), cw, dtype),
+            "conv_b": jnp.zeros((conv_ch,), dtype),
+            "dt_bias": jnp.full((nh,), -4.0, jnp.float32),
+            "A_log": jnp.zeros((nh,), jnp.float32),
+            "D": jnp.ones((nh,), jnp.float32),
+            "gate_ln": init_rmsnorm(di, dtype),
+            "out_proj": _dense_init(ks[4], (di, d), di, dtype),
+        })
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None):
+    """Depthwise causal conv along S. x: (B,S,ch); w: (cw,ch).
+
+    state: (B, cw-1, ch) trailing inputs from the previous segment (or None
+    for zero history). Returns (y (B,S,ch), new_state (B, cw-1, ch)).
+    """
+    cw = w.shape[0]
+    B, S, ch = x.shape
+    if state is None:
+        state = jnp.zeros((B, cw - 1, ch), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+cw-1, ch)
+    y = sum(xp[:, i:i + S] * w[i][None, None] for i in range(cw))
+    new_state = xp[:, S:]  # last cw-1 inputs
+    return jax.nn.silu(y + b[None, None]), new_state
+
+
+def mamba1_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                   state: tuple | None = None):
+    """x: (B,S,d). state: (h (B,di,n), conv (B,cw-1,di)) or None.
+    Returns (y (B,S,d), new_state)."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    r = dt_rank(cfg)
+    h0, conv0 = state if state is not None else (None, None)
+    xz = x @ p["in_proj"]                              # (B,S,2di)
+    xs, z = xz[..., :di], xz[..., di:]
+    xs, conv_state = _causal_conv(xs, p["conv_w"], p["conv_b"], conv0)
+    proj = xs @ p["x_proj"]                            # (B,S,r+2n)
+    dt = jax.nn.softplus(proj[..., :r] @ p["dt_proj"]
+                         + p["dt_bias"].astype(x.dtype))
+    Bm, Cm = proj[..., r:r + n], proj[..., r + n:]
+    A = -jnp.exp(p["A_log"])                           # (di,n)
+    y, h = ops.mamba1_scan(xs, dt, A, Bm, Cm, p["D"], h0)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], (h, conv_state)
+
+
+def mamba2_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                   state: tuple | None = None):
+    """x: (B,S,d). state: (h (B,nh,hp,n), conv (B,cw-1,di+2n)) or None."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh, hp = n_heads2(cfg), mamba2_head_dim(cfg)
+    h0, conv0 = state if state is not None else (None, None)
+    proj = x @ p["in_proj"]                            # (B,S,2di+2n+nh)
+    z = proj[..., :di]
+    xbc = proj[..., di:2 * di + 2 * n]
+    dt = jax.nn.softplus(proj[..., 2 * di + 2 * n:]
+                         + p["dt_bias"].astype(x.dtype))  # (B,S,nh)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv0)
+    xs = xbc[..., :di].reshape(*x.shape[:2], nh, hp)
+    Bm, Cm = xbc[..., di:di + n], xbc[..., di + n:]
+    A = -jnp.exp(p["A_log"])                           # (nh,)
+    y, h = ops.mamba2_scan(xs, dt, A, Bm, Cm, p["D"], h0)
+    y = y.reshape(*x.shape[:2], di)
+    y = rmsnorm(p["gate_ln"], y * jax.nn.silu(z), cfg.rmsnorm_eps)
+    return y @ p["out_proj"], (h, conv_state)
+
+
+def mamba_block(cfg: ModelConfig, p: dict, x: jax.Array,
+                state: tuple | None = None):
+    """Pre-norm residual Mamba block. Returns (x, new_state)."""
+    fwd = mamba1_forward if cfg.ssm_version == 1 else mamba2_forward
+    y, new_state = fwd(cfg, p, rmsnorm(p["ln"], x, cfg.rmsnorm_eps), state)
+    return x + y, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    """Zero recurrent state for one Mamba layer."""
+    di, n, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.ssm_version == 1:
+        h = jnp.zeros((batch, di, n), jnp.float32)
+        conv = jnp.zeros((batch, cw - 1, di), dtype)
+    else:
+        nh, hp = n_heads2(cfg), mamba2_head_dim(cfg)
+        h = jnp.zeros((batch, nh, hp, n), jnp.float32)
+        conv = jnp.zeros((batch, cw - 1, di + 2 * n), dtype)
+    return (h, conv)

@@ -1,0 +1,83 @@
+"""Mixture-of-Experts layer: top-k routing with per-expert capacity,
+sort-based dispatch (no (T,E,C) one-hot blowup), and load-balance aux loss.
+
+This is the GSPMD-friendly baseline formulation: everything is gathers,
+scatters and batched einsums over a static (E, C, d) buffer, so the expert
+axis shards cleanly over the "model" mesh axis (expert parallelism). The
+shard_map all-to-all variant lives in ``moe_ep.py`` (§Perf optimization).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d, E), d, jnp.float32),
+        "wg": _dense_init(ks[1], (E, d, f), d, dtype),
+        "wu": _dense_init(ks[2], (E, d, f), d, dtype),
+        "wd": _dense_init(ks[3], (E, f, d), f, dtype),
+    }
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(tokens * cfg.experts_per_token / cfg.num_experts
+                  * cfg.capacity_factor)
+    return max(8, min(c, tokens))
+
+
+def moe_forward(cfg: ModelConfig, p: dict, x: jax.Array):
+    """x: (B, S, d) -> (y (B,S,d), aux_loss scalar)."""
+    from repro.models import moe_ep
+    if moe_ep.ep_applicable(cfg):
+        return moe_ep.moe_forward_ep(cfg, p, x)
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    C = capacity(T, cfg)
+    xf = x.reshape(T, d)
+
+    logits = xf.astype(jnp.float32) @ p["router"]          # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, k)                   # (T, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)    # renormalize
+
+    # ---- sort-based dispatch -------------------------------------------
+    e_flat = topi.reshape(T * k)
+    sort_idx = jnp.argsort(e_flat)                         # (T*k,)
+    e_sorted = e_flat[sort_idx]
+    counts = jnp.bincount(e_flat, length=E)                # (E,)
+    offsets = jnp.cumsum(counts) - counts                  # exclusive
+    pos_in_e = jnp.arange(T * k) - offsets[e_sorted]       # slot within expert
+    tok = sort_idx // k                                    # source token id
+
+    # scatter into the (E, C, d) compute buffer; slots >= C are dropped
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[e_sorted, pos_in_e].set(xf[tok], mode="drop")
+
+    # ---- expert compute (grouped einsum; E shards over "model") -------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["wd"])         # (E, C, d)
+
+    # ---- gather back + combine ----------------------------------------
+    keep = (pos_in_e < C)
+    y_sorted = y_buf[e_sorted, jnp.minimum(pos_in_e, C - 1)]
+    y_sorted = jnp.where(keep[:, None], y_sorted, 0)
+    y_flat = jnp.zeros((T * k, d), x.dtype).at[sort_idx].set(y_sorted)
+    y = (y_flat.reshape(T, k, d)
+         * topw[..., None].astype(x.dtype)).sum(axis=1)
+
+    # ---- load-balance aux loss (Switch-style) --------------------------
+    frac = counts.astype(jnp.float32) / (T * k)            # dispatch fraction
+    prob = jnp.mean(gates, axis=0)                         # mean router prob
+    aux = cfg.router_aux_coef * E * jnp.sum(frac * prob)
+    return y.reshape(B, S, d), aux

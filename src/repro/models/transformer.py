@@ -1,0 +1,361 @@
+"""Unified model definition covering all assigned architecture families.
+
+One functional API over dense / MoE / SSM / hybrid / encoder / VLM configs:
+
+  init_params(cfg, key)                      -> params
+  forward_full(cfg, params, inputs)          -> (logits, aux)      train/encode
+  forward_prefill(cfg, params, inputs, S_max)-> (logits, cache)    fill cache
+  init_decode_cache(cfg, batch, S_max)       -> cache
+  forward_decode(cfg, params, cache, tok, pos)-> (logits, cache)   one token
+
+Layers are scanned (stacked params) for compile-time sanity at 512 devices;
+the zamba2 hybrid scans Mamba groups with ONE shared attention block applied
+between groups (weight sharing preserved; per-application-site KV caches).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+def _stack_init(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p: dict = {}
+    if cfg.modality != "audio_frames":
+        p["embed"] = (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model))
+                      * 0.02).astype(dtype)
+    p["final_ln"] = L.init_rmsnorm(cfg.d_model, dtype)
+    p["lm_head"] = L._dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                 cfg.d_model, dtype)
+    layout = cfg.layer_layout
+    if cfg.arch_type == "hybrid":
+        p["mamba"] = _stack_init(lambda k: M.init_mamba(cfg, k), ks[2],
+                                 cfg.num_layers)
+        p["shared_attn"] = L.init_block(cfg, ks[3])  # single shared block
+    elif cfg.arch_type == "ssm":
+        p["mamba"] = _stack_init(lambda k: M.init_mamba(cfg, k), ks[2],
+                                 cfg.num_layers)
+    else:
+        p["blocks"] = _stack_init(lambda k: L.init_block(cfg, k), ks[2],
+                                  cfg.num_layers)
+    return p
+
+
+def _embed(cfg: ModelConfig, params: dict, inputs: jax.Array) -> jax.Array:
+    if cfg.modality == "audio_frames":
+        return inputs  # precomputed frame embeddings (stub frontend)
+    return params["embed"][inputs]
+
+
+def _unembed(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = L.rmsnorm(params["final_ln"], x, cfg.rmsnorm_eps)
+    return x @ params["lm_head"]
+
+
+def _n_sites(cfg: ModelConfig) -> int:
+    """Hybrid: number of shared-attention application sites."""
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+# ----------------------------------------------------------------------------
+# full-sequence forward (train / encode / prefill compute)
+# ----------------------------------------------------------------------------
+
+def _remat_wrap(body, remat):
+    """remat: False | True ("full") | "dots" (save matmul outputs — avoids
+    recomputing TP collectives in the backward pass at higher live memory)."""
+    if not remat:
+        return body
+    if remat == "dots":
+        return jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body, prevent_cse=False)
+
+
+def forward_full(cfg: ModelConfig, params: dict, inputs: jax.Array,
+                 positions: jax.Array | None = None, remat=True):
+    """inputs: int32 tokens (B,S) or float frames (B,S,d). -> (logits, aux)."""
+    x = _embed(cfg, params, inputs)
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    causal = not cfg.is_encoder
+
+    if cfg.arch_type in ("ssm", "hybrid"):
+        x = _backbone_ssm_full(cfg, params, x, positions, remat)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        def body(carry, lp):
+            h, aux = carry
+            h, a = L.block_full(cfg, lp, h, positions, causal=causal)
+            return (h, aux + a), None
+        body = _remat_wrap(body, remat)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+    return _unembed(cfg, params, x), aux
+
+
+def _backbone_ssm_full(cfg, params, x, positions, remat):
+    def mbody(h, lp):
+        h, _ = M.mamba_block(cfg, lp, h)
+        return h, None
+    mbody = _remat_wrap(mbody, remat)
+    if cfg.arch_type == "ssm":
+        x, _ = jax.lax.scan(mbody, x, params["mamba"])
+        return x
+
+    # hybrid: scan groups of `shared_attn_every` mamba layers, applying the
+    # single shared attention block between groups.
+    g = _n_sites(cfg)
+    gs = cfg.shared_attn_every
+    grouped = jax.tree.map(lambda a: a.reshape(g, gs, *a.shape[1:]),
+                           params["mamba"])
+    shared = params["shared_attn"]
+
+    def gbody(h, glp):
+        h, _ = jax.lax.scan(mbody, h, glp)
+        h, _ = L.block_full(cfg, shared, h, positions, causal=True)
+        return h, None
+    gbody = _remat_wrap(gbody, remat)
+    x, _ = jax.lax.scan(gbody, x, grouped)
+    return x
+
+
+# ----------------------------------------------------------------------------
+# decode cache
+# ----------------------------------------------------------------------------
+
+def _kv_store_dtype(cfg: ModelConfig):
+    return jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.dtype(cfg.dtype)
+
+
+def kv_cache_seq(cfg: ModelConfig, max_seq: int) -> int:
+    """SWA caches are ring buffers of `sliding_window` columns — the 500k
+    SWA decode cache is 64x smaller than the sequence."""
+    if cfg.attn_variant == "swa" and 0 < cfg.sliding_window < max_seq:
+        return cfg.sliding_window
+    return max_seq
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    dtype = _kv_store_dtype(cfg)
+    max_seq = kv_cache_seq(cfg, max_seq)
+    cache: dict = {}
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+        cache["k"] = jnp.zeros(shape, dtype)
+        cache["v"] = jnp.zeros(shape, dtype)
+        if cfg.kv_cache_dtype == "int8":
+            cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+    if cfg.arch_type in ("ssm", "hybrid"):
+        h, conv = M.init_mamba_state(cfg, batch)
+        n = cfg.num_layers
+        cache["ssm_h"] = jnp.zeros((n, *h.shape), h.dtype)
+        cache["ssm_conv"] = jnp.zeros((n, *conv.shape), conv.dtype)
+    if cfg.arch_type == "hybrid":
+        ns = _n_sites(cfg)
+        shape = (ns, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+        cache["k"] = jnp.zeros(shape, dtype)
+        cache["v"] = jnp.zeros(shape, dtype)
+        if cfg.kv_cache_dtype == "int8":
+            cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+    return cache
+
+
+# ----------------------------------------------------------------------------
+# decode step (one new token against the cache)
+# ----------------------------------------------------------------------------
+
+def forward_decode(cfg: ModelConfig, params: dict, cache: dict,
+                   tokens: jax.Array, pos: jax.Array):
+    """tokens: (B,1) int32 (or (B,1,d) frames); pos: scalar or (B,).
+    Returns (logits (B,1,V), new_cache)."""
+    x = _embed(cfg, params, tokens)
+
+    quant = cfg.kv_cache_dtype == "int8"
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        def body(h, xs):
+            lp, kc, vc, ks, vs = xs
+            h, kc, vc, ks, vs = L.block_decode(cfg, lp, h, pos, kc, vc,
+                                               ks, vs)
+            return h, (kc, vc, ks, vs)
+        scales = ((cache["k_scale"], cache["v_scale"]) if quant
+                  else (None, None))
+        x, (k, v, ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], *scales))
+        new_cache = {"k": k, "v": v}
+        if quant:
+            new_cache.update({"k_scale": ks, "v_scale": vs})
+    elif cfg.arch_type == "ssm":
+        def body(h, xs):
+            lp, sh, sc = xs
+            h, (sh, sc) = M.mamba_block(cfg, lp, h, (sh, sc))
+            return h, (sh, sc)
+        x, (sh, sc) = jax.lax.scan(body, x, (params["mamba"], cache["ssm_h"],
+                                             cache["ssm_conv"]))
+        new_cache = {"ssm_h": sh, "ssm_conv": sc}
+    else:  # hybrid
+        g, gs = _n_sites(cfg), cfg.shared_attn_every
+        grouped = jax.tree.map(lambda a: a.reshape(g, gs, *a.shape[1:]),
+                               params["mamba"])
+        sh_g = cache["ssm_h"].reshape(g, gs, *cache["ssm_h"].shape[1:])
+        sc_g = cache["ssm_conv"].reshape(g, gs, *cache["ssm_conv"].shape[1:])
+        shared = params["shared_attn"]
+
+        def mbody(h, xs):
+            lp, s_h, s_c = xs
+            h, (s_h, s_c) = M.mamba_block(cfg, lp, h, (s_h, s_c))
+            return h, (s_h, s_c)
+
+        def gbody(h, xs):
+            glp, s_h, s_c, kc, vc, ks, vs = xs
+            h, (s_h, s_c) = jax.lax.scan(mbody, h, (glp, s_h, s_c))
+            h, kc, vc, ks, vs = L.block_decode(cfg, shared, h, pos, kc, vc,
+                                               ks, vs)
+            return h, (s_h, s_c, kc, vc, ks, vs)
+
+        scales = ((cache["k_scale"], cache["v_scale"]) if quant
+                  else (None, None))
+        x, (sh, sc, k, v, ks, vs) = jax.lax.scan(
+            gbody, x, (grouped, sh_g, sc_g, cache["k"], cache["v"], *scales))
+        new_cache = {
+            "ssm_h": sh.reshape(cfg.num_layers, *sh.shape[2:]),
+            "ssm_conv": sc.reshape(cfg.num_layers, *sc.shape[2:]),
+            "k": k, "v": v,
+        }
+        if quant:
+            new_cache.update({"k_scale": ks, "v_scale": vs})
+    return _unembed(cfg, params, x), new_cache
+
+
+# ----------------------------------------------------------------------------
+# prefill: full-seq compute that also fills the decode cache
+# ----------------------------------------------------------------------------
+
+def forward_prefill(cfg: ModelConfig, params: dict, inputs: jax.Array,
+                    max_seq: int, remat: bool = True):
+    """Process the prompt and return (logits (B,S,V), filled cache).
+
+    The cache is sized to ``max_seq``; prompt K/V occupy [0, S).
+    """
+    x = _embed(cfg, params, inputs)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def attn_prefill(lp, h):
+        """Run one attention block full-seq, returning (h, (k_S, v_S))."""
+        hn = L.rmsnorm(lp["ln1"], h, cfg.rmsnorm_eps)
+        q, k, v = L._qkv(cfg, lp["attn"], hn)
+        if cfg.head_dim and cfg.rope_theta and not cfg.is_encoder:
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+        from repro.kernels import ops
+        window = cfg.sliding_window if cfg.attn_variant == "swa" else 0
+        o = ops.flash_attention(q, k, v, causal=True, window=window)
+        h = h + jnp.einsum("bsqh,qhd->bsd", o, lp["attn"]["wo"])
+        hn = L.rmsnorm(lp["ln2"], h, cfg.rmsnorm_eps)
+        if cfg.is_moe:
+            from repro.models import moe as moe_mod
+            y, _ = moe_mod.moe_forward(cfg, lp["moe"], hn)
+        else:
+            y = L.mlp(lp["mlp"], hn)
+        return h + y, (k, v)
+
+    cache_seq = kv_cache_seq(cfg, max_seq)
+
+    def _to_cache_layout(a, axis):
+        """Lay prompt K/V (seq length S) into the cache's seq columns.
+
+        Plain cache: right-pad to cache_seq. Ring (SWA) cache of w columns:
+        column j holds the latest prompt position p ≡ j (mod w); earlier
+        positions are overwritten, matching decode-time wrapping.
+        """
+        axis = axis % a.ndim
+        ring = (cfg.attn_variant == "swa" and cfg.sliding_window > 0
+                and cache_seq == cfg.sliding_window)
+        if not ring:
+            pad = [(0, 0)] * a.ndim
+            pad[axis] = (0, cache_seq - S)
+            return jnp.pad(a, pad)
+        w = cache_seq
+        j = jnp.arange(w)
+        p = (S - 1) - ((S - 1 - j) % w)          # latest pos per column
+        valid = p >= 0
+        gathered = jnp.take(a, jnp.clip(p, 0, S - 1), axis=axis)
+        mask_shape = [1] * a.ndim
+        mask_shape[axis] = w
+        return jnp.where(valid.reshape(mask_shape), gathered, 0)
+
+    def pad_cache(kv):
+        """Lay prompt K/V into the cache; quantize if configured."""
+        k, v = kv  # (L?, B, S, nkv, hd)
+        out = {}
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = L.quantize_kv(k)
+            vq, vs = L.quantize_kv(v)
+            out["k"] = _to_cache_layout(kq, -3)
+            out["v"] = _to_cache_layout(vq, -3)
+            out["k_scale"] = _to_cache_layout(ks, -2)
+            out["v_scale"] = _to_cache_layout(vs, -2)
+        else:
+            out["k"] = _to_cache_layout(k, -3)
+            out["v"] = _to_cache_layout(v, -3)
+        return out
+
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        def body(h, lp):
+            h, kv = attn_prefill(lp, h)
+            return h, kv
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, (k, v) = jax.lax.scan(body, x, params["blocks"])
+        cache = pad_cache((k, v))
+    elif cfg.arch_type == "ssm":
+        def body(h, lp):
+            h, st = M.mamba_block(cfg, lp, h)
+            return h, st
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, (sh, sc) = jax.lax.scan(body, x, params["mamba"])
+        cache = {"ssm_h": sh, "ssm_conv": sc}
+    else:  # hybrid
+        g, gs = _n_sites(cfg), cfg.shared_attn_every
+        grouped = jax.tree.map(lambda a: a.reshape(g, gs, *a.shape[1:]),
+                               params["mamba"])
+        shared = params["shared_attn"]
+
+        def mbody(h, lp):
+            h, st = M.mamba_block(cfg, lp, h)
+            return h, st
+
+        def gbody(h, glp):
+            h, st = jax.lax.scan(mbody, h, glp)
+            h, kv = attn_prefill(shared, h)
+            return h, (st, kv)
+        if remat:
+            gbody = jax.checkpoint(gbody, prevent_cse=False)
+        x, ((sh, sc), (k, v)) = jax.lax.scan(gbody, x, grouped)
+        cache = pad_cache((k, v))
+        cache.update({
+            "ssm_h": sh.reshape(cfg.num_layers, *sh.shape[2:]),
+            "ssm_conv": sc.reshape(cfg.num_layers, *sc.shape[2:]),
+        })
+    return _unembed(cfg, params, x), cache

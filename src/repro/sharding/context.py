@@ -1,0 +1,41 @@
+"""Distribution context: lets model code (e.g. the MoE layer) pick a
+distribution-aware implementation when lowering for a mesh, without
+threading mesh handles through every forward signature.
+
+The dry-run / production launchers set this; CPU engines leave it unset.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class DistContext:
+    mesh: object
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    moe_impl: str = "gspmd"          # "gspmd" | "ep" (shard_map expert-par)
+
+
+_CTX: Optional[DistContext] = None
+
+
+def set_context(ctx: Optional[DistContext]) -> None:
+    global _CTX
+    _CTX = ctx
+
+
+def get_context() -> Optional[DistContext]:
+    return _CTX
+
+
+@contextmanager
+def distribution(ctx: DistContext):
+    prev = get_context()
+    set_context(ctx)
+    try:
+        yield
+    finally:
+        set_context(prev)

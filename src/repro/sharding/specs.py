@@ -1,0 +1,200 @@
+"""Adaptive sharding rules: logical-dim -> mesh-axis PartitionSpecs.
+
+Rules (DESIGN.md §5):
+  - parameters: tensor-parallel over "model" (heads / ffn / experts / vocab),
+    replicated over "data" and "pod";
+  - batch dims shard over ("pod","data") when divisible;
+  - decode KV caches shard kv-heads over "model" when divisible by the
+    model-axis size, else the sequence axis (context parallelism); with
+    batch=1 (long_500k) the sequence axis also takes the data axis.
+GSPMD pads non-divisible sharded dims, so annotations never change
+semantics — only layout.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ----------------------------------------------------------------------------
+# parameter specs, by param-tree path
+# ----------------------------------------------------------------------------
+
+_PARAM_RULES = {
+    # name-suffix -> spec WITHOUT the stacked-layer leading dim
+    "embed": P("model", None),
+    "lm_head": P(None, "model"),
+    "wq": P(None, "model", None),      # (d, nq, hd)
+    "wk": P(None, "model", None),
+    "wv": P(None, "model", None),
+    "wo": P("model", None, None),      # (nq, hd, d)
+    "bq": P("model", None),
+    "bk": P("model", None),
+    "bv": P("model", None),
+    "wg": P(None, "model"),            # (d, f)
+    "wu": P(None, "model"),
+    "wd": P("model", None),            # (f, d)
+    "router": P(None, "model"),        # (d, E)
+    "in_proj": P(None, "model"),       # (d, 2di[+...])
+    "conv_w": P(None, "model"),        # (cw, ch)
+    "conv_b": P("model"),
+    "x_proj": P("model", None),        # (di, r+2n)
+    "dt_proj": P(None, "model"),       # (r, di)
+    "dt_bias": P("model"),
+    "A_log": P("model"),               # (di, n) or (nh,) -- padded below
+    "D": P("model"),
+    "out_proj": P("model", None),      # (di, d)
+    "scale": P(None),                  # rmsnorm
+    # DiT extras
+    "xwq": P(None, "model", None), "xwk": P(None, "model", None),
+    "xwv": P(None, "model", None), "xwo": P("model", None, None),
+    "ada": P(None, "model"), "in_projd": P(None, "model"),
+    "t_mlp1": P(None, "model"), "t_mlp2": P("model", None),
+}
+
+# MoE expert-stacked weights get the expert dim sharded instead
+_MOE_RULES = {
+    "wg": P("model", None, None),      # (E, d, f)
+    "wu": P("model", None, None),
+    "wd": P("model", None, None),      # (E, f, d)
+}
+
+
+def _key_name(k) -> str:
+    return k.key if hasattr(k, "key") else str(k)
+
+
+def fit_spec(mesh: Mesh, shape: Tuple[int, ...], spec: P) -> P:
+    """Make a spec legal for explicit in_shardings: every named axis must
+    evenly divide its dim. Axes that don't fit are dropped; if "model" gets
+    dropped entirely, it is re-placed on the largest dim it divides (so
+    params stay tensor-parallel even when the preferred dim is too small,
+    e.g. 8 kv heads on a model=16 axis -> shard head_dim instead)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    parts = parts[:len(shape)]
+    dropped = []
+    for i, (dim, p) in enumerate(zip(shape, parts)):
+        if p is None:
+            continue
+        if dim % axis_size(mesh, p) != 0:
+            dropped.append(p)
+            parts[i] = None
+    for p in dropped:
+        if p in parts:
+            continue
+        cands = [i for i, (dim, q) in enumerate(zip(shape, parts))
+                 if q is None and dim % axis_size(mesh, p) == 0 and dim > 1]
+        if cands:
+            best = max(cands, key=lambda i: shape[i])
+            parts[best] = p
+    return P(*parts)
+
+
+def param_specs(cfg: ModelConfig, params, mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec pytree matching ``params`` (handles stacked-layer dims)."""
+
+    def spec_for(path, leaf):
+        names = [_key_name(k) for k in path]
+        last = names[-1]
+        in_moe = "moe" in names
+        rules = _MOE_RULES if (in_moe and last in _MOE_RULES) else _PARAM_RULES
+        base = rules.get(last)
+        if base is None:
+            return P()
+        # stacked-layer leading dims: params under "blocks"/"mamba" carry an
+        # extra (L,) axis relative to the single-layer shapes.
+        extra = leaf.ndim - len(base)
+        if extra < 0:  # e.g. A_log (nh,) vs rule (di,n): trim
+            base = P(*base[:leaf.ndim])
+            extra = leaf.ndim - len(base)
+        spec = P(*([None] * extra), *base)
+        if mesh is not None:
+            spec = fit_spec(mesh, leaf.shape, spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def shardings(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------------------------------
+# activation / cache specs
+# ----------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, batch: int) -> Optional[Tuple[str, ...]]:
+    """Best batch sharding: the largest prefix of ("pod","data") dividing B."""
+    axes = data_axes(mesh)
+    while axes and batch % axis_size(mesh, axes) != 0:
+        axes = axes[:-1]
+    return axes or None
+
+
+def token_specs(cfg: ModelConfig, mesh: Mesh, batch: int) -> P:
+    b = batch_spec(mesh, batch)
+    if cfg.modality == "audio_frames":
+        return P(b, None, None)
+    return P(b, None)
+
+
+def kv_cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int,
+                   seq_shard_axes=None) -> dict:
+    """Specs for the decode cache dict of init_decode_cache."""
+    msize = mesh.shape["model"]
+    b = batch_spec(mesh, batch)
+    specs = {}
+    if "k" in _cache_keys(cfg):
+        if cfg.num_kv_heads % msize == 0:
+            kvspec = P(None, b, seq_shard_axes, "model", None)
+        else:
+            # context parallelism: shard the sequence axis over "model"
+            kvspec = P(None, b, ("model",) if seq_shard_axes is None
+                       else seq_shard_axes, None, None)
+        if b is None and batch == 1:
+            # batch=1 long-context: sequence takes the data axes too
+            prev = kvspec[2]
+            prev_axes = ((prev,) if isinstance(prev, str)
+                         else tuple(prev or ()))
+            kvspec = P(None, None, ("data",) + prev_axes, *kvspec[3:])
+        specs["k"] = kvspec
+        specs["v"] = kvspec
+        # int8 KV quantization scales: same layout minus the head_dim axis
+        sc = P(*tuple(kvspec)[:-1])
+        specs["k_scale"] = sc
+        specs["v_scale"] = sc
+    if cfg.arch_type in ("ssm", "hybrid"):
+        if cfg.ssm_version == 1:
+            specs["ssm_h"] = P(None, b, "model", None)       # (L,B,di,n)
+        else:
+            specs["ssm_h"] = P(None, b, "model", None, None)  # (L,B,nh,hp,n)
+        specs["ssm_conv"] = P(None, b, None, "model")        # (L,B,cw-1,ch)
+    return specs
+
+
+def _cache_keys(cfg: ModelConfig):
+    keys = []
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio", "hybrid"):
+        keys += ["k", "v"]
+    if cfg.arch_type in ("ssm", "hybrid"):
+        keys += ["ssm_h", "ssm_conv"]
+    return keys

@@ -1,0 +1,61 @@
+"""Checkpointing: flat-key npz snapshots of params + optimizer state."""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path: str, params, opt_state=None, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        flat.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    flat["meta/step"] = np.asarray(step)
+    np.savez(path, **flat)
+
+
+def load(path: str, params_template, opt_template=None):
+    """Restore into the same pytree structure as the templates."""
+    data = np.load(path)
+
+    def restore(template, prefix):
+        flat_t, treedef = jax.tree.flatten_with_path(template)
+        leaves = []
+        for path_keys, leaf in flat_t:
+            key = prefix + "/".join(_key_str(k) for k in path_keys)
+            arr = data[key]
+            if arr.dtype.kind == "V":
+                # npz round-trips ml_dtypes (bfloat16, ...) as raw void
+                arr = arr.view(np.dtype(leaf.dtype))
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        return jax.tree.unflatten(jax.tree.structure(template), leaves)
+
+    params = restore(params_template, "params/")
+    opt = restore(opt_template, "opt/") if opt_template is not None else None
+    step = int(data["meta/step"])
+    return params, opt, step
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

@@ -1,0 +1,72 @@
+"""AdamW optimizer (pure JAX, pytree-native) with cosine LR schedule."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_clip: float = 1.0
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(1, cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * cfg.lr * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mu_hat = mu / (1 - cfg.b1 ** step.astype(jnp.float32))
+        nu_hat = nu / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,33 @@
+"""Train step: next-token cross-entropy (+ MoE aux loss) with AdamW."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def loss_fn(cfg: ModelConfig, params, inputs, labels, remat=True):
+    logits, aux = T.forward_full(cfg, params, inputs, remat=remat)
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    ce = jnp.mean(nll)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, remat=True):
+    def train_step(params, opt_state, inputs, labels):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, inputs, labels, remat=remat),
+            has_aux=True)(params)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+    return train_step

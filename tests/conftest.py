@@ -1,0 +1,17 @@
+"""Tests run on the single real CPU device (the 512-device forcing is
+confined to repro.launch.dryrun, which tests never import)."""
+import os
+
+# make sure nothing leaked the dry-run device forcing into the test env
+flags = os.environ.get("XLA_FLAGS", "")
+if "host_platform_device_count" in flags:
+    os.environ["XLA_FLAGS"] = " ".join(
+        f for f in flags.split() if "host_platform_device_count" not in f)
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,86 @@
+"""The assigned architecture configs must match the assignment sheet."""
+import pytest
+
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, get_config,
+                                shape_skips, variant_for_shape)
+
+EXPECTED = {
+    # arch: (type, L, d_model, heads, kv, d_ff, vocab)
+    "qwen2_5_14b": ("dense", 48, 5120, 40, 8, 13824, 152064),
+    "internlm2_1_8b": ("dense", 24, 2048, 16, 8, 8192, 92544),
+    "qwen3_moe_30b_a3b": ("moe", 48, 2048, 32, 4, 768, 151936),
+    "zamba2_2_7b": ("hybrid", 54, 2560, 32, 32, 10240, 32000),
+    "starcoder2_7b": ("dense", 32, 4608, 36, 4, 18432, 49152),
+    "mixtral_8x7b": ("moe", 32, 4096, 32, 8, 14336, 32000),
+    "qwen1_5_4b": ("dense", 40, 2560, 20, 20, 6912, 151936),
+    "hubert_xlarge": ("audio", 48, 1280, 16, 16, 5120, 504),
+    "falcon_mamba_7b": ("ssm", 64, 4096, 0, 0, 0, 65024),
+    "chameleon_34b": ("vlm", 48, 8192, 64, 8, 22016, 65536),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assignment(arch):
+    t, L, d, h, kv, ff, v = EXPECTED[arch]
+    cfg = get_config(arch)
+    assert cfg.arch_type == t
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.source, "config must cite its source"
+
+
+def test_special_features():
+    assert get_config("qwen2_5_14b").qkv_bias
+    assert get_config("qwen1_5_4b").qkv_bias
+    q3 = get_config("qwen3_moe_30b_a3b")
+    assert (q3.num_experts, q3.experts_per_token) == (128, 8)
+    mx = get_config("mixtral_8x7b")
+    assert (mx.num_experts, mx.experts_per_token) == (8, 2)
+    assert mx.attn_variant == "swa" and mx.sliding_window == 4096
+    zb = get_config("zamba2_2_7b")
+    assert zb.ssm_state == 64 and zb.ssm_version == 2
+    assert zb.shared_attn_every > 0
+    fm = get_config("falcon_mamba_7b")
+    assert fm.ssm_state == 16 and fm.ssm_version == 1
+    assert get_config("hubert_xlarge").is_encoder
+    assert get_config("chameleon_34b").modality == "vq_image+text"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_reduced(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.num_experts <= 4
+
+
+def test_param_counts_plausible():
+    # analytic param counts should land near the advertised sizes
+    approx = {
+        "qwen2_5_14b": 14e9, "internlm2_1_8b": 1.8e9,
+        "qwen3_moe_30b_a3b": 30e9, "zamba2_2_7b": 2.7e9,
+        "starcoder2_7b": 7e9, "mixtral_8x7b": 47e9, "qwen1_5_4b": 4e9,
+        "hubert_xlarge": 1e9, "falcon_mamba_7b": 7e9, "chameleon_34b": 34e9,
+    }
+    for arch, target in approx.items():
+        n = get_config(arch).param_count()
+        assert 0.5 * target < n < 1.8 * target, (arch, n, target)
+
+
+def test_shape_skips():
+    hub = get_config("hubert_xlarge")
+    assert shape_skips(hub, INPUT_SHAPES["decode_32k"])
+    assert shape_skips(hub, INPUT_SHAPES["long_500k"])
+    assert not shape_skips(hub, INPUT_SHAPES["train_4k"])
+    dense = get_config("qwen2_5_14b")
+    assert not shape_skips(dense, INPUT_SHAPES["long_500k"])
+    v = variant_for_shape(dense, INPUT_SHAPES["long_500k"])
+    assert v.attn_variant == "swa" and v.sliding_window > 0
+    fm = variant_for_shape(get_config("falcon_mamba_7b"),
+                           INPUT_SHAPES["long_500k"])
+    assert fm.attn_variant == "full"   # SSM needs no windowing

@@ -1,0 +1,56 @@
+"""Connector round-trip + stats tests (incl. hypothesis payload sweep)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.connector.mooncake import MooncakeConnector, make_connector
+
+
+@pytest.mark.parametrize("kind", ["inline", "shm", "mooncake"])
+def test_roundtrip_nested(kind):
+    conn = make_connector(kind)
+    payload = {"tokens": np.arange(7, dtype=np.int32),
+               "hidden": np.random.randn(7, 16).astype(np.float32),
+               "meta": {"n": 3, "name": "x"}}
+    conn.put("k1", payload)
+    got = conn.get("k1")
+    np.testing.assert_array_equal(got["tokens"], payload["tokens"])
+    np.testing.assert_array_equal(got["hidden"], payload["hidden"])
+    assert got["meta"] == payload["meta"]
+    assert conn.stats.calls == 1
+    assert conn.stats.bytes >= payload["tokens"].nbytes + payload["hidden"].nbytes
+    assert conn.metadata("k1")["nbytes"] == conn.stats.bytes
+    conn.delete("k1")
+    assert conn.metadata("k1") is None
+
+
+@given(hnp.arrays(dtype=st.sampled_from([np.float32, np.int32, np.float16]),
+                  shape=hnp.array_shapes(min_dims=1, max_dims=3,
+                                         max_side=16)))
+@settings(max_examples=40, deadline=None)
+def test_roundtrip_arbitrary_arrays(arr):
+    for kind in ("inline", "shm", "mooncake"):
+        conn = make_connector(kind)
+        conn.put("k", {"a": arr})
+        got = conn.get("k")["a"]
+        np.testing.assert_array_equal(np.asarray(got), arr)
+
+
+def test_mooncake_cost_model():
+    conn = MooncakeConnector(bandwidth_gbps=10.0, latency_s=1e-4)
+    big = np.zeros((1000, 1000), np.float32)     # 4 MB
+    conn.put("k", big)
+    conn.get("k")
+    # put + get hops: 2 * (latency + 4e6/10e9)
+    expected = 2 * (1e-4 + big.nbytes / 10e9)
+    assert abs(conn.stats.modeled_time - expected) < 1e-6
+
+
+def test_keys_are_independent():
+    conn = make_connector("shm")
+    conn.put("a", np.ones(3))
+    conn.put("b", np.zeros(3))
+    np.testing.assert_array_equal(conn.get("a"), np.ones(3))
+    np.testing.assert_array_equal(conn.get("b"), np.zeros(3))

@@ -1,0 +1,37 @@
+"""A broken transfer function fails only ITS request — other in-flight
+requests complete normally (production fault isolation)."""
+import numpy as np
+
+from repro.configs.pipelines import build_qwen_omni
+from repro.core.orchestrator import Orchestrator
+from repro.core.request import Request
+
+
+def test_transfer_failure_isolated():
+    graph, engines, _ = build_qwen_omni(max_batch=2, thinker_tokens=3,
+                                        talker_tokens=6, dit_steps=2)
+    # sabotage the thinker->talker transfer for ONE request id
+    edge = next(e for e in graph.edges if e.src == "thinker")
+    orig = edge.transfer
+    victim = {}
+
+    def flaky(data, payload):
+        if data.get("poison"):
+            raise RuntimeError("boom")
+        return orig(data, payload)
+    edge.transfer = flaky
+
+    orch = Orchestrator(graph, engines)
+    good = [Request(inputs={"tokens": np.arange(6, dtype=np.int32)})
+            for _ in range(2)]
+    bad = Request(inputs={"tokens": np.arange(6, dtype=np.int32)},
+                  data={"poison": True})
+    for r in (good[0], bad, good[1]):
+        orch.submit(r)
+    done = orch.run()
+    assert bad.failed is not None and "boom" in bad.failed
+    assert bad.completion_time is not None
+    for r in good:
+        assert r.failed is None
+        assert r.outputs.get("vocoder"), "healthy requests must complete"
+    assert len(done) == 3

@@ -1,0 +1,162 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
+executed with interpret=True on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba1_scan
+from repro.kernels.paged_attention import paged_attention
+
+KEYS = jax.random.split(jax.random.PRNGKey(7), 16)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,nq,nkv,hd", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 128, 8, 1, 128),    # MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_sweep(b, s, nq, nkv, hd, causal, window, dtype):
+    q = jax.random.normal(KEYS[0], (b, s, nq, hd), dtype)
+    k = jax.random.normal(KEYS[1], (b, s, nkv, hd), dtype)
+    v = jax.random.normal(KEYS[2], (b, s, nkv, hd), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bk=64, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,nq,nkv,hd,page,pp", [
+    (2, 8, 2, 64, 8, 4),
+    (3, 4, 4, 128, 16, 2),
+    (1, 16, 2, 64, 8, 8),
+])
+@pytest.mark.parametrize("window", [0, 16])
+def test_paged_attention_sweep(b, nq, nkv, hd, page, pp, window, dtype):
+    P = b * pp + 2
+    q = jax.random.normal(KEYS[3], (b, nq, hd), dtype)
+    kp = jax.random.normal(KEYS[4], (P, page, nkv, hd), dtype)
+    vp = jax.random.normal(KEYS[5], (P, page, nkv, hd), dtype)
+    bt = jax.random.permutation(KEYS[6], P)[:b * pp].reshape(b, pp)
+    bt = bt.astype(jnp.int32)
+    max_len = page * pp
+    sl = jax.random.randint(KEYS[7], (b,), 1, max_len + 1).astype(jnp.int32)
+    got = paged_attention(q, kp, vp, bt, sl, window=window, interpret=True)
+    want = ref.paged_attention(q, kp, vp, bt, sl, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_paged_attention_int8_dequant():
+    """Quantized page pool with in-kernel dequant vs dequantized-ref."""
+    b, nq, nkv, hd, page, pp = 2, 8, 2, 64, 8, 4
+    P = b * pp + 2
+    q = jax.random.normal(KEYS[3], (b, nq, hd), jnp.float32)
+    kf = jax.random.normal(KEYS[4], (P, page, nkv, hd), jnp.float32)
+    vf = jax.random.normal(KEYS[5], (P, page, nkv, hd), jnp.float32)
+
+    def quant(x):
+        s = jnp.max(jnp.abs(x), axis=-1) / 127.0 + 1e-8
+        return jnp.round(x / s[..., None]).astype(jnp.int8), s
+    kq, ks = quant(kf)
+    vq, vs = quant(vf)
+    bt = jax.random.permutation(KEYS[6], P)[:b * pp].reshape(b, pp)
+    bt = bt.astype(jnp.int32)
+    sl = jnp.array([13, 29], jnp.int32)
+    got = paged_attention(q, kq, vq, bt, sl, k_scale_pages=ks,
+                          v_scale_pages=vs, interpret=True)
+    want = ref.paged_attention(q, kq, vq, bt, sl, k_scale_pages=ks,
+                               v_scale_pages=vs)
+    exact = ref.paged_attention(q, kf, vf, bt, sl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # and close to the unquantized result
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exact),
+                               rtol=0.05, atol=0.05)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bt,s,di,n", [(1, 64, 128, 8), (2, 128, 256, 16)])
+def test_mamba_scan_sweep(bt, s, di, n, dtype):
+    x = (jax.random.normal(KEYS[8], (bt, s, di)) * 0.5).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(KEYS[9], (bt, s, di))) * 0.1
+          ).astype(dtype)
+    A = -jnp.exp(jax.random.normal(KEYS[10], (di, n)) * 0.3)
+    B = jax.random.normal(KEYS[11], (bt, s, n)).astype(dtype)
+    C = jax.random.normal(KEYS[12], (bt, s, n)).astype(dtype)
+    D = jnp.ones((di,))
+    y1, h1 = mamba1_scan(x, dt, A, B, C, D, bd=128, bs=32, interpret=True)
+    y2, h2 = ref.mamba1_scan(x, dt, A, B, C, D)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-2,
+                               atol=1e-2)
+
+
+def test_mamba_scan_state_continuation():
+    """Scanning two halves with carried state == scanning the whole."""
+    bt, s, di, n = 1, 64, 128, 8
+    x = jax.random.normal(KEYS[13], (bt, s, di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(KEYS[14], (bt, s, di))) * 0.1
+    A = -jnp.exp(jax.random.normal(KEYS[15], (di, n)) * 0.3)
+    B = jax.random.normal(KEYS[0], (bt, s, n))
+    C = jax.random.normal(KEYS[1], (bt, s, n))
+    D = jnp.ones((di,))
+    y_full, h_full = ref.mamba1_scan(x, dt, A, B, C, D)
+    h = None
+    ys = []
+    for lo, hi in ((0, 32), (32, 64)):
+        y, h = mamba1_scan(x[:, lo:hi], dt[:, lo:hi], A, B[:, lo:hi],
+                           C[:, lo:hi], D, h, bd=128, bs=32, interpret=True)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_trainable_grads():
+    """jax.grad through the Pallas kernel (custom VJP, recompute backward)
+    must match grads of the oracle."""
+    from repro.kernels import ops
+    b, s, nq, nkv, hd = 1, 64, 4, 2, 32
+    q = jax.random.normal(KEYS[5], (b, s, nq, hd))
+    k = jax.random.normal(KEYS[6], (b, s, nkv, hd))
+    v = jax.random.normal(KEYS[7], (b, s, nkv, hd))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(ops.flash_attention_trainable(q, k, v, True, 0) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.flash_attention(q, k, v, causal=True) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_chunk_attention_matches_flash():
+    """chunk_attention over a full history == flash_attention causal."""
+    b, s, nq, nkv, hd = 1, 64, 4, 2, 32
+    q = jax.random.normal(KEYS[2], (b, s, nq, hd))
+    k = jax.random.normal(KEYS[3], (b, s, nkv, hd))
+    v = jax.random.normal(KEYS[4], (b, s, nkv, hd))
+    want = ref.flash_attention(q, k, v, causal=True)
+    got = ref.chunk_attention(q, k, v, jnp.zeros((b,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

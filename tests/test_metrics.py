@@ -1,0 +1,40 @@
+"""Serving metrics (JCT/TTFT/throughput) over completed requests."""
+import numpy as np
+
+from repro.configs.pipelines import build_qwen_omni
+from repro.core.metrics import summarize
+from repro.core.orchestrator import Orchestrator
+from repro.core.request import Request
+
+
+def test_summarize_on_real_pipeline():
+    graph, engines, _ = build_qwen_omni(max_batch=2, thinker_tokens=3,
+                                        talker_tokens=6, stream_chunk=3,
+                                        dit_steps=2)
+    orch = Orchestrator(graph, engines)
+    reqs = [Request(inputs={"tokens": np.arange(6, dtype=np.int32)})
+            for _ in range(3)]
+    for r in reqs:
+        orch.submit(r)
+    orch.run()
+    m = summarize(reqs, wall_time=1.0)
+    assert m["n"] == 3
+    assert m["jct_mean"] > 0
+    assert m["jct_p95"] >= m["jct_p50"] > 0
+    # streaming: first output strictly precedes completion
+    assert 0 < m["ttft_p50"] <= m["jct_p50"]
+    assert m["req_per_s"] == 3.0
+
+
+def test_ttft_recorded_only_once():
+    graph, engines, _ = build_qwen_omni(max_batch=2, thinker_tokens=3,
+                                        talker_tokens=9, stream_chunk=3,
+                                        dit_steps=2)
+    orch = Orchestrator(graph, engines)
+    req = Request(inputs={"tokens": np.arange(6, dtype=np.int32)})
+    orch.submit(req)
+    orch.run()
+    assert req.first_output_time is not None
+    assert req.first_output_time <= req.completion_time
+    # 9 talker tokens / 3-chunks => 3 vocoder chunks collected
+    assert len(req.outputs["vocoder"]) == 3

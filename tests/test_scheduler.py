@@ -1,0 +1,114 @@
+"""Property-based tests of the continuous-batching scheduler invariants."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.engine.kv_cache import PageAllocator, PagedKVConfig
+from repro.engine.sampling import SamplingParams
+from repro.engine.scheduler import Scheduler
+
+
+@given(st.lists(st.integers(1, 40), min_size=1, max_size=30),
+       st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_page_accounting_conserved(prompt_lens, max_batch):
+    kv = PagedKVConfig(num_pages=64, page_size=8, max_pages_per_seq=16)
+    sched = Scheduler(kv, max_batch=max_batch, token_budget=64, chunk_size=16)
+    for i, pl in enumerate(prompt_lens):
+        sched.add(i, pl, SamplingParams(max_new_tokens=4))
+    for _ in range(3000):
+        if not sched.has_work:
+            break
+        plan = sched.schedule()
+        assert sched.allocator.check_invariant()
+        if not plan.prefill_chunks and not plan.decode_req_ids:
+            break
+        for ch in plan.prefill_chunks:
+            sched.note_prefill(ch.req_id, ch.length)
+            seq = sched.running[ch.req_id]
+            if not seq.in_prefill:
+                if sched.note_sampled(ch.req_id, 0):
+                    sched.release(ch.req_id)
+        for rid in list(plan.decode_req_ids):
+            if rid not in sched.running or sched.running[rid].finished:
+                continue
+            sched.note_decode_written(rid)
+            if sched.note_sampled(rid, 1):
+                sched.release(rid)
+    # drained: every page back in the pool
+    assert not sched.running
+    assert sched.allocator.free_pages == kv.num_pages
+    assert sched.allocator.check_invariant()
+
+
+@given(st.lists(st.integers(1, 30), min_size=2, max_size=20))
+@settings(max_examples=30, deadline=None)
+def test_fifo_admission(prompt_lens):
+    kv = PagedKVConfig(num_pages=32, page_size=8, max_pages_per_seq=8)
+    sched = Scheduler(kv, max_batch=4, token_budget=64, chunk_size=16)
+    for i, pl in enumerate(prompt_lens):
+        sched.add(i, pl, SamplingParams(max_new_tokens=2))
+    admitted = []
+    for _ in range(2000):
+        if not sched.has_work:
+            break
+        plan = sched.schedule()
+        admitted.extend(plan.admitted)
+        if not plan.prefill_chunks and not plan.decode_req_ids:
+            break
+        for ch in plan.prefill_chunks:
+            sched.note_prefill(ch.req_id, ch.length)
+            if not sched.running[ch.req_id].in_prefill:
+                if sched.note_sampled(ch.req_id, 0):
+                    sched.release(ch.req_id)
+        for rid in list(plan.decode_req_ids):
+            if rid in sched.running and not sched.running[rid].finished:
+                sched.note_decode_written(rid)
+                if sched.note_sampled(rid, 1):
+                    sched.release(rid)
+    assert admitted == sorted(admitted), "admission must be FIFO"
+    assert admitted == list(range(len(prompt_lens))), "no starvation"
+
+
+@given(st.integers(8, 64), st.integers(1, 6), st.integers(1, 100))
+@settings(max_examples=30, deadline=None)
+def test_token_budget_respected(budget, max_batch, seed):
+    import random
+    r = random.Random(seed)
+    kv = PagedKVConfig(num_pages=128, page_size=8, max_pages_per_seq=16)
+    sched = Scheduler(kv, max_batch=max_batch, token_budget=budget,
+                      chunk_size=16)
+    for i in range(10):
+        sched.add(i, r.randint(1, 60), SamplingParams(max_new_tokens=3))
+    for _ in range(1000):
+        if not sched.has_work:
+            break
+        plan = sched.schedule()
+        if not plan.prefill_chunks and not plan.decode_req_ids:
+            break
+        # prefill tokens never exceed what decode left in the budget
+        prefill_toks = sum(c.length for c in plan.prefill_chunks)
+        assert prefill_toks <= max(0, budget - len(plan.decode_req_ids)) \
+            or prefill_toks == 0
+        for ch in plan.prefill_chunks:
+            sched.note_prefill(ch.req_id, ch.length)
+            if not sched.running[ch.req_id].in_prefill:
+                if sched.note_sampled(ch.req_id, 0):
+                    sched.release(ch.req_id)
+        for rid in list(plan.decode_req_ids):
+            if rid in sched.running and not sched.running[rid].finished:
+                sched.note_decode_written(rid)
+                if sched.note_sampled(rid, 1):
+                    sched.release(rid)
+
+
+def test_allocator_basics():
+    a = PageAllocator(10)
+    p1 = a.allocate(1, 4)
+    p2 = a.allocate(2, 6)
+    assert p1 and p2 and a.free_pages == 0
+    assert a.allocate(3, 1) is None
+    a.free(1)
+    assert a.free_pages == 4
+    assert a.check_invariant()
+    a.free(2)
+    assert a.free_pages == 10

@@ -1,0 +1,93 @@
+"""Sharding-spec properties (these run on 1 device: specs are pure data)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models import transformer as T
+from repro.sharding import specs as S
+
+
+class FakeMesh:
+    """Stands in for a 16x16 mesh without touching jax devices."""
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+class FakePodMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+MESH = FakeMesh()
+
+
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       st.integers(0, 3))
+@settings(max_examples=100, deadline=None)
+def test_fit_spec_always_legal(dims, which):
+    base = [None, "model", "data", ("data", "model")][which]
+    spec = P(base, *([None] * (len(dims) - 1)))
+    fitted = S.fit_spec(MESH, tuple(d * 16 for d in dims), spec)
+    for dim, p in zip(tuple(d * 16 for d in dims), tuple(fitted)):
+        if p is not None:
+            assert (dim % S.axis_size(MESH, p)) == 0
+
+
+def test_fit_spec_relocates_model_axis():
+    # 8 kv heads can't take model=16; the axis moves to the largest
+    # divisible dim (d_model here), keeping the weight tensor-parallel
+    fitted = S.fit_spec(MESH, (24, 2048, 8, 128), P(None, None, "model", None))
+    assert "model" in tuple(fitted)
+    assert tuple(fitted)[2] is None
+    idx = tuple(fitted).index("model")
+    assert (24, 2048, 8, 128)[idx] % 16 == 0
+
+
+def test_fit_spec_drops_when_nothing_fits():
+    fitted = S.fit_spec(MESH, (3, 5), P("model", "data"))
+    assert tuple(fitted) == (None, None)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_cover_all_leaves(arch):
+    cfg = get_config(arch)   # FULL config: real production shapes
+    tpl = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = S.param_specs(cfg, tpl, MESH)
+    leaves_t = jax.tree.leaves(tpl)
+    leaves_s = jax.tree.leaves(pspecs,
+                               is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_t) == len(leaves_s)
+    n_sharded = 0
+    for t, s in zip(leaves_t, leaves_s):
+        for dim, p in zip(t.shape, tuple(s)):
+            if p is not None:
+                assert dim % S.axis_size(MESH, p) == 0, (arch, t.shape, s)
+                n_sharded += 1
+    # the big weights must actually be sharded
+    assert n_sharded >= len(leaves_t) // 3, (arch, n_sharded, len(leaves_t))
+
+
+@pytest.mark.parametrize("arch", ["qwen2_5_14b", "falcon_mamba_7b",
+                                  "zamba2_2_7b"])
+@pytest.mark.parametrize("batch", [128, 1])
+def test_kv_cache_specs_legal(arch, batch):
+    cfg = get_config(arch)
+    tpl = jax.eval_shape(lambda: T.init_decode_cache(cfg, batch, 32768))
+    cspecs = S.kv_cache_specs(cfg, MESH, batch)
+    for key, t in tpl.items():
+        sp = S.fit_spec(MESH, t.shape, cspecs[key])
+        for dim, p in zip(t.shape, tuple(sp)):
+            if p is not None:
+                assert dim % S.axis_size(MESH, p) == 0
+
+
+def test_batch_spec_prefix():
+    assert S.batch_spec(MESH, 256) == ("data",)
+    assert S.batch_spec(MESH, 3) is None
+    pod = FakePodMesh()
+    assert S.batch_spec(pod, 256) == ("pod", "data")
+    assert S.batch_spec(pod, 16) == ("pod",)   # 16 % 32 != 0 -> pod only

@@ -1,0 +1,85 @@
+"""Stage-graph structural tests (incl. hypothesis random-DAG property)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import StageGraph
+from repro.core.stage import StageSpec
+
+
+def _g():
+    g = StageGraph()
+    g.add_stage(StageSpec("a", "ar"))
+    g.add_stage(StageSpec("b", "ar"))
+    g.add_stage(StageSpec("c", "diffusion", is_output=True))
+    g.add_edge("a", "b", lambda d, p: p)
+    g.add_edge("b", "c", lambda d, p: p, streaming=True)
+    return g
+
+
+def test_topo_and_sources():
+    g = _g()
+    order = g.topo_order()
+    assert order.index("a") < order.index("b") < order.index("c")
+    assert g.sources() == ["a"]
+    assert g.output_stages() == ["c"]
+    g.validate()
+
+
+def test_cycle_detection():
+    g = _g()
+    g.add_edge("c", "a", lambda d, p: p)
+    with pytest.raises(ValueError, match="cycle"):
+        g.topo_order()
+
+
+def test_duplicate_stage_rejected():
+    g = _g()
+    with pytest.raises(ValueError, match="duplicate"):
+        g.add_stage(StageSpec("a", "ar"))
+
+
+def test_unknown_edge_rejected():
+    g = _g()
+    with pytest.raises(ValueError, match="unknown"):
+        g.add_edge("a", "zzz", lambda d, p: p)
+
+
+def test_default_outputs_are_sinks():
+    g = StageGraph()
+    g.add_stage(StageSpec("x", "ar"))
+    g.add_stage(StageSpec("y", "ar"))
+    g.add_edge("x", "y", lambda d, p: p)
+    assert g.output_stages() == ["y"]
+
+
+def test_bad_kind_rejected():
+    with pytest.raises(AssertionError):
+        StageSpec("x", "warp-speed")
+
+
+@given(st.integers(1, 8), st.data())
+@settings(max_examples=60, deadline=None)
+def test_random_dag_topo_property(n, data):
+    """Any random forward-edge graph validates; topo order respects every
+    edge; adding a back edge creates a detected cycle."""
+    g = StageGraph()
+    for i in range(n):
+        g.add_stage(StageSpec(f"s{i}", "ar"))
+    edges = []
+    for i in range(n):
+        for j in range(i + 1, n):
+            if data.draw(st.booleans()):
+                g.add_edge(f"s{i}", f"s{j}", lambda d, p: p)
+                edges.append((i, j))
+    order = g.topo_order()
+    assert sorted(order) == sorted(f"s{i}" for i in range(n))
+    pos = {s: k for k, s in enumerate(order)}
+    for i, j in edges:
+        assert pos[f"s{i}"] < pos[f"s{j}"]
+    g.validate()
+    if edges:
+        i, j = edges[data.draw(st.integers(0, len(edges) - 1))]
+        g.add_edge(f"s{j}", f"s{i}", lambda d, p: p)   # back edge
+        with pytest.raises(ValueError, match="cycle"):
+            g.topo_order()

@@ -1,0 +1,47 @@
+"""Per-stage accelerator allocation (paper Fig 3(c)): carving stage
+submeshes out of the global mesh. Subprocess with 8 forced host devices."""
+import os
+import subprocess
+import sys
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_stage_submesh
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+# allocate model-axis devices 0..2 to the thinker, 2..4 to the talker
+thinker_mesh = make_stage_submesh(mesh, "model", 0, 2)
+talker_mesh = make_stage_submesh(mesh, "model", 2, 4)
+dt = {d.id for d in thinker_mesh.devices.flat}
+dk = {d.id for d in talker_mesh.devices.flat}
+assert dt.isdisjoint(dk), (dt, dk)
+assert dt | dk == {d.id for d in mesh.devices.flat}
+assert thinker_mesh.axis_names == mesh.axis_names
+
+# each stage jits onto ITS OWN submesh
+def stage_fn(w, x):
+    return x @ w
+w = jnp.ones((16, 16)); x = jnp.ones((4, 16))
+for m in (thinker_mesh, talker_mesh):
+    with m:
+        out = jax.jit(stage_fn,
+                      in_shardings=(NamedSharding(m, P(None, "model")),
+                                    NamedSharding(m, P("data", None))),
+                      )(w, x)
+        devs = {d.id for d in out.sharding.device_set}
+        assert devs <= {d.id for d in m.devices.flat}
+print("SUBMESH-OK")
+"""
+
+
+def test_stage_submesh_allocation():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "SUBMESH-OK" in r.stdout, r.stdout + r.stderr
