@@ -1,0 +1,22 @@
+PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+
+.PHONY: test test-fast check serve-online bench-online
+
+# default pre-commit check: sub-minute smoke subset
+check: test-fast
+
+test-fast:
+	$(PY) -m pytest -q -m fast
+
+# full tier-1 suite (~6.5 min)
+test:
+	$(PY) -m pytest -q
+
+# online serving demo through the per-stage-worker backend
+serve-online:
+	$(PY) -m repro.launch.serve --pipeline qwen_omni --online \
+	    --requests 12 --rate 4.0 --max-inflight 8
+
+# concurrent-stage vs lock-step comparison with a slowed stage
+bench-online:
+	$(PY) -m benchmarks.bench_online

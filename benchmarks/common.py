@@ -12,6 +12,40 @@ from repro.core.request import Request
 FRAME_SECONDS = 0.02          # one vocoder latent frame = 20 ms of audio
 
 
+class SlowedEngine:
+    """Wraps a StageEngine, adding a fixed dwell to every step that has
+    work — emulates a much heavier model on one stage so benchmarks can
+    show what a slow stage does to the rest of the pipeline (lock-step:
+    stalls everything; per-stage workers: only its own queue grows)."""
+
+    def __init__(self, engine, step_delay_s: float):
+        self.engine = engine
+        self.step_delay_s = step_delay_s
+        self.name = engine.name
+        self._extra_busy = 0.0
+
+    def enqueue(self, req_id, inputs, sampling, data):
+        self.engine.enqueue(req_id, inputs, sampling, data)
+
+    def step(self):
+        if self.engine.has_work:
+            time.sleep(self.step_delay_s)
+            self._extra_busy += self.step_delay_s
+        return self.engine.step()
+
+    @property
+    def has_work(self) -> bool:
+        return self.engine.has_work
+
+    @property
+    def queue_depth(self) -> int:
+        return getattr(self.engine, "queue_depth", 0)
+
+    @property
+    def busy_time(self) -> float:
+        return self.engine.busy_time + self._extra_busy
+
+
 def prompts(n: int, lo=8, hi=24, vocab=500, seed=0) -> List[np.ndarray]:
     rng = np.random.default_rng(seed)
     return [rng.integers(0, vocab, size=int(rng.integers(lo, hi))

@@ -2,8 +2,23 @@
 
 A connector moves intermediate data objects (embeddings, hidden states,
 codec tokens, audio/image tensors — and intra-stage KV / MM caches) between
-stages through a common put/get interface; only lightweight metadata rides
-the control plane.
+stages through a common interface; only lightweight metadata rides the
+control plane.
+
+Two API levels share one data plane:
+
+  - synchronous ``put`` / ``get`` / ``delete`` — the original single-thread
+    interface, kept for offline tooling and the lock-step compat path;
+  - asynchronous channel API — ``send`` returns a :class:`TransferHandle`
+    immediately, ``recv`` blocks (or polls, via ``poll``) until the key has
+    been published by the producer side, and ``release`` ends the object's
+    lifetime explicitly.  This is what the per-stage workers use: the
+    router publishes on the upstream side and the destination stage worker
+    receives + deserializes in its own thread, overlapping transfers with
+    compute.
+
+All entry points are thread-safe (one lock + condition per connector
+instance: producers notify, consumers wait).
 
 On this CPU container the three backends model the paper's deployment
 topologies:
@@ -19,6 +34,7 @@ be reproduced.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
@@ -41,6 +57,124 @@ class TransferStats:
         self.modeled_time += modeled
 
 
+@dataclass
+class TransferHandle:
+    """Returned by ``send``: enough for the control plane to route the
+    object without touching the data plane."""
+    key: str
+    nbytes: int
+    t_send: float
+
+
+class Connector:
+    """put/get data plane + metadata control plane + async channel API.
+
+    Concurrency contract: the heavy data-plane hooks (``_pack`` /
+    ``_unpack`` — serialize and deserialize copies) run WITHOUT the
+    connector lock, so two stage workers can deserialize concurrently and
+    the router's publish never waits behind an in-progress recv.  Only the
+    cheap control-plane hooks (``_publish`` / ``_fetch`` / ``_evict`` —
+    dict bookkeeping) run under the lock.
+    """
+
+    name = "base"
+
+    def __init__(self) -> None:
+        self.stats = TransferStats()
+        self._meta: Dict[str, dict] = {}
+        self._entries: Dict[str, Any] = {}
+        self._lock = threading.RLock()
+        self._ready = threading.Condition(self._lock)
+
+    # -- control plane ---------------------------------------------------
+    def metadata(self, key: str) -> Optional[dict]:
+        with self._lock:
+            return self._meta.get(key)
+
+    def poll(self, key: str) -> bool:
+        """True once the key has been published and not yet released."""
+        with self._lock:
+            return key in self._meta
+
+    # -- async channel API -------------------------------------------------
+    def send(self, key: str, payload: Any) -> TransferHandle:
+        """Publish a payload under ``key`` and wake any waiting ``recv``."""
+        t0 = time.perf_counter()
+        nbytes = payload_nbytes(payload)
+        entry, modeled = self._pack(payload)         # heavy copy, unlocked
+        with self._ready:
+            self._publish(key, entry)
+            self._meta[key] = {"nbytes": nbytes, "t_put": t0}
+            self.stats.record(nbytes, time.perf_counter() - t0, modeled)
+            self._ready.notify_all()
+        return TransferHandle(key=key, nbytes=nbytes, t_send=t0)
+
+    def recv(self, key: str, timeout: Optional[float] = None) -> Any:
+        """Block until ``key`` is published, then load it.
+
+        ``timeout=None`` waits forever; ``timeout=0`` is a non-blocking
+        probe. Raises ``TimeoutError`` if the key never shows up.
+        """
+        t0 = time.perf_counter()
+        deadline = None if timeout is None else t0 + timeout
+        with self._ready:
+            # the while condition re-checks after every wait, so a publish
+            # racing the timeout expiry is never dropped
+            while key not in self._meta:
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"connector[{self.name}] recv({key!r}) timed out")
+                self._ready.wait(remaining)
+            entry = self._fetch(key)
+        payload, modeled = self._unpack(entry)       # heavy copy, unlocked
+        with self._lock:
+            self.stats.wall_time += time.perf_counter() - t0
+            self.stats.modeled_time += modeled
+        return payload
+
+    def release(self, key: str) -> None:
+        """Explicitly end the object's lifetime (eviction)."""
+        with self._lock:
+            self._meta.pop(key, None)
+            self._evict(key)
+
+    # -- synchronous API (compat) -----------------------------------------
+    def put(self, key: str, payload: Any) -> None:
+        self.send(key, payload)
+
+    def get(self, key: str) -> Any:
+        with self._ready:
+            if key not in self._meta:
+                raise KeyError(key)
+        return self.recv(key, timeout=0.0)
+
+    def delete(self, key: str) -> None:
+        self.release(key)
+
+    # -- backend hooks -----------------------------------------------------
+    # heavy data plane — run WITHOUT the connector lock, must not touch
+    # shared state
+    def _pack(self, payload: Any) -> Tuple[Any, float]:
+        """payload -> (storable entry, modeled transfer time)."""
+        return payload, 0.0
+
+    def _unpack(self, entry: Any) -> Tuple[Any, float]:
+        """stored entry -> (payload, modeled transfer time)."""
+        return entry, 0.0
+
+    # cheap control plane — run under the connector lock
+    def _publish(self, key: str, entry: Any) -> None:
+        self._entries[key] = entry
+
+    def _fetch(self, key: str) -> Any:
+        return self._entries[key]
+
+    def _evict(self, key: str) -> None:
+        self._entries.pop(key, None)
+
+
 def payload_nbytes(payload: Any) -> int:
     leaves = jax.tree.leaves(payload)
     total = 0
@@ -54,46 +188,3 @@ def payload_nbytes(payload: Any) -> int:
         elif isinstance(leaf, str):
             total += len(leaf)
     return total
-
-
-class Connector:
-    """put/get data plane + metadata control plane."""
-
-    name = "base"
-
-    def __init__(self) -> None:
-        self.stats = TransferStats()
-        self._meta: Dict[str, dict] = {}
-
-    # -- control plane ---------------------------------------------------
-    def metadata(self, key: str) -> Optional[dict]:
-        return self._meta.get(key)
-
-    # -- data plane -------------------------------------------------------
-    def put(self, key: str, payload: Any) -> None:
-        t0 = time.perf_counter()
-        nbytes = payload_nbytes(payload)
-        modeled = self._store(key, payload)
-        self._meta[key] = {"nbytes": nbytes, "t_put": t0}
-        self.stats.record(nbytes, time.perf_counter() - t0, modeled)
-
-    def get(self, key: str) -> Any:
-        t0 = time.perf_counter()
-        payload, modeled = self._load(key)
-        self.stats.wall_time += time.perf_counter() - t0
-        self.stats.modeled_time += modeled
-        return payload
-
-    def delete(self, key: str) -> None:
-        self._meta.pop(key, None)
-        self._evict(key)
-
-    # -- backend hooks -----------------------------------------------------
-    def _store(self, key: str, payload: Any) -> float:
-        raise NotImplementedError
-
-    def _load(self, key: str) -> Tuple[Any, float]:
-        raise NotImplementedError
-
-    def _evict(self, key: str) -> None:
-        pass

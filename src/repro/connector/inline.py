@@ -1,25 +1,15 @@
 """Inline connector: control-queue pass-by-reference for small payloads
-(single-node, same-process engines)."""
-from __future__ import annotations
+(single-node, same-process engines).
 
-from typing import Any, Dict, Tuple
+No copy is made: ``send`` publishes the object reference and ``recv``
+hands it straight to the consumer, so cross-thread visibility is provided
+entirely by the base class's lock/condition pair.  The base class's
+identity ``_pack``/``_unpack`` and dict ``_publish``/``_fetch``/``_evict``
+are exactly that behavior."""
+from __future__ import annotations
 
 from repro.connector.base import Connector
 
 
 class InlineConnector(Connector):
     name = "inline"
-
-    def __init__(self) -> None:
-        super().__init__()
-        self._store_map: Dict[str, Any] = {}
-
-    def _store(self, key: str, payload: Any) -> float:
-        self._store_map[key] = payload
-        return 0.0
-
-    def _load(self, key: str) -> Tuple[Any, float]:
-        return self._store_map[key], 0.0
-
-    def _evict(self, key: str) -> None:
-        self._store_map.pop(key, None)

@@ -3,17 +3,18 @@
 Data plane: serializing copy on put and on get (two memcpys, as in a real
 distributed KV store client), plus a TCP/RDMA hop cost model
 (latency + bytes/bandwidth) reported as ``stats.modeled_time`` — this
-container has one node, so the wire time is modeled, not slept.
+container has one node, so the wire time is modeled, not slept.  Both
+copies run outside the connector lock (``_pack``/``_unpack``).
 Control plane: metadata only ({key, nbytes, location}), as in the paper.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np
 
-from repro.connector.base import Connector, payload_nbytes
+from repro.connector.base import Connector
 
 
 class MooncakeConnector(Connector):
@@ -22,39 +23,50 @@ class MooncakeConnector(Connector):
     def __init__(self, bandwidth_gbps: float = 12.5, latency_s: float = 30e-6):
         """Defaults model 100 GbE RDMA: 12.5 GB/s, 30us one-way latency."""
         super().__init__()
-        self._objects: Dict[str, tuple] = {}
         self.bandwidth = bandwidth_gbps * 1e9
         self.latency = latency_s
+        # store-side occupancy: objects published but not yet released
+        # (the channel API makes lifetimes explicit, so this is auditable)
+        self.resident_objects = 0
+        self.peak_resident_objects = 0
 
     def _wire_time(self, nbytes: int) -> float:
         return self.latency + nbytes / self.bandwidth
 
-    def _store(self, key: str, payload: Any) -> float:
+    def _pack(self, payload: Any) -> Tuple[Any, float]:
         leaves, treedef = jax.tree.flatten(payload)
         blobs = []
+        nbytes = 0
         for leaf in leaves:
             if hasattr(leaf, "shape"):
                 arr = np.asarray(leaf)
-                blobs.append(("arr", arr.tobytes(), arr.dtype.str, arr.shape))
+                raw = arr.tobytes()
+                nbytes += len(raw)
+                blobs.append(("arr", raw, arr.dtype.str, arr.shape))
             else:
                 blobs.append(("py", leaf, None, None))
-        self._objects[key] = (blobs, treedef)
-        return self._wire_time(payload_nbytes(payload))
+        return (blobs, treedef, nbytes), self._wire_time(nbytes)
 
-    def _load(self, key: str) -> Tuple[Any, float]:
-        blobs, treedef = self._objects[key]
+    def _unpack(self, entry: Any) -> Tuple[Any, float]:
+        blobs, treedef, nbytes = entry
         leaves = []
-        nbytes = 0
         for kind, data, dtype, shape in blobs:
             if kind == "arr":
                 leaves.append(np.frombuffer(data, dtype=dtype).reshape(shape))
-                nbytes += len(data)
             else:
                 leaves.append(data)
         return jax.tree.unflatten(treedef, leaves), self._wire_time(nbytes)
 
+    def _publish(self, key: str, entry: Any) -> None:
+        if key not in self._entries:
+            self.resident_objects += 1
+            self.peak_resident_objects = max(self.peak_resident_objects,
+                                             self.resident_objects)
+        self._entries[key] = entry
+
     def _evict(self, key: str) -> None:
-        self._objects.pop(key, None)
+        if self._entries.pop(key, None) is not None:
+            self.resident_objects -= 1
 
 
 def make_connector(name: str, **kw) -> Connector:

@@ -1,11 +1,17 @@
 """Shared-memory connector: single-node large-payload transport.
 
 Payloads are flattened to contiguous host buffers (a real serialize copy —
-the analogue of writing into /dev/shm) and reconstructed on get.
+the analogue of writing into /dev/shm) and reconstructed on get.  Both
+copies run outside the connector lock (``_pack``/``_unpack``), so
+concurrent stage workers deserialize in parallel.  The pool tracks
+resident bytes and a high-water mark so the explicit-lifetime channel API
+(``send``/``recv``/``release``) can be audited for leaks: a serving run
+that never releases its keys shows up as a monotonically growing
+``resident_bytes``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np
@@ -18,22 +24,25 @@ class SharedMemoryConnector(Connector):
 
     def __init__(self) -> None:
         super().__init__()
-        self._buffers: Dict[str, tuple] = {}
+        self.resident_bytes = 0
+        self.peak_resident_bytes = 0
 
-    def _store(self, key: str, payload: Any) -> float:
+    def _pack(self, payload: Any) -> Tuple[Any, float]:
         leaves, treedef = jax.tree.flatten(payload)
         bufs = []
+        nbytes = 0
         for leaf in leaves:
             if hasattr(leaf, "shape"):
                 arr = np.asarray(leaf)
-                bufs.append(("arr", arr.tobytes(), arr.dtype.str, arr.shape))
+                raw = arr.tobytes()
+                nbytes += len(raw)
+                bufs.append(("arr", raw, arr.dtype.str, arr.shape))
             else:
                 bufs.append(("py", leaf, None, None))
-        self._buffers[key] = (bufs, treedef)
-        return 0.0
+        return (bufs, treedef, nbytes), 0.0
 
-    def _load(self, key: str) -> Tuple[Any, float]:
-        bufs, treedef = self._buffers[key]
+    def _unpack(self, entry: Any) -> Tuple[Any, float]:
+        bufs, treedef, _ = entry
         leaves = []
         for kind, data, dtype, shape in bufs:
             if kind == "arr":
@@ -42,5 +51,15 @@ class SharedMemoryConnector(Connector):
                 leaves.append(data)
         return jax.tree.unflatten(treedef, leaves), 0.0
 
+    def _publish(self, key: str, entry: Any) -> None:
+        if key in self._entries:
+            self._evict(key)
+        self._entries[key] = entry
+        self.resident_bytes += entry[2]
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self.resident_bytes)
+
     def _evict(self, key: str) -> None:
-        self._buffers.pop(key, None)
+        entry = self._entries.pop(key, None)
+        if entry is not None:
+            self.resident_bytes -= entry[2]

@@ -35,8 +35,16 @@ class StageGraph:
     def out_edges(self, name: str) -> List[StageEdge]:
         return [e for e in self.edges if e.src == name]
 
+    def in_edges(self, name: str) -> List[StageEdge]:
+        return [e for e in self.edges if e.dst == name]
+
     def in_degree(self, name: str) -> int:
         return sum(1 for e in self.edges if e.dst == name)
+
+    @staticmethod
+    def edge_id(edge: StageEdge) -> str:
+        """Canonical edge name used for connector keys and metrics."""
+        return f"{edge.src}->{edge.dst}"
 
     def sources(self) -> List[str]:
         return [n for n in self.stages if self.in_degree(n) == 0]

@@ -32,3 +32,36 @@ def summarize(requests: List[Request], wall_time: Optional[float] = None,
     if audio_frames:
         out["rtf_mean"] = out["jct_mean"] / (audio_frames * frame_seconds)
     return out
+
+
+def summarize_queueing(requests: List[Request]) -> Dict[str, Dict[str, float]]:
+    """Per-stage queueing delay (submit -> engine admission) percentiles
+    over a set of requests — the §3.1 disaggregation win shows up here:
+    a slow stage's queue grows while other stages' delays stay flat."""
+    per_stage: Dict[str, List[float]] = {}
+    for r in requests:
+        for stage, delays in r.queue_delays.items():
+            per_stage.setdefault(stage, []).append(float(sum(delays)))
+    return {stage: {
+        "mean": float(np.mean(ds)),
+        "p50": _pct(ds, 50),
+        "p95": _pct(ds, 95),
+        "max": float(np.max(ds)),
+    } for stage, ds in per_stage.items()}
+
+
+def stage_report(stage_metrics: Dict[str, Dict[str, float]]) -> str:
+    """Render Orchestrator.stage_metrics() as an aligned text table."""
+    cols = ["admitted", "finished", "steps", "busy_time", "busy_frac",
+            "finished_per_s", "queue_delay_p50", "queue_delay_p95",
+            "max_inbox_depth"]
+    head = "stage".ljust(12) + "".join(c.rjust(17) for c in cols)
+    lines = [head]
+    for stage, m in stage_metrics.items():
+        cells = []
+        for c in cols:
+            v = m.get(c, 0)
+            cells.append((f"{v:.4f}" if isinstance(v, float)
+                          else str(v)).rjust(17))
+        lines.append(stage.ljust(12) + "".join(cells))
+    return "\n".join(lines)

@@ -1,29 +1,50 @@
-"""Orchestrator (paper §3.1/§3.3): routes requests through the stage graph.
+"""Orchestrator (paper §3.1/§3.3): event-driven router over per-stage
+workers — the fully disaggregated execution backend.
 
-One process manages all stage engines: each tick it steps every engine,
-collects finished / streamed outputs, applies edge transfer functions,
-moves payloads through the per-edge connector (put/get with metadata
-control plane), and enqueues downstream stage inputs. Streaming edges
-forward chunks before the upstream stage finishes, overlapping stages
-(paper's "streaming stage output").
+Two backends share all routing logic:
+
+  - ``threaded`` (default): every stage engine runs in its own
+    :class:`~repro.core.worker.StageWorker` thread with a bounded inbox;
+    a router thread consumes the shared event queue that all workers emit
+    into, applies edge transfer functions through the connector channel
+    API (``send`` on the upstream side, lazy ``recv`` inside the
+    destination worker), and pushes downstream stage inputs.  Stages
+    batch and step concurrently and independently — a slow stage fills
+    its own inbox (per-edge backpressure) instead of stalling the whole
+    pipeline.  Online arrivals enter through ``submit`` at any time.
+
+  - ``sync``: the original lock-step loop — each ``tick`` steps every
+    engine once in topo order and routes synchronously.  Kept as the
+    ablation baseline (bench_online measures threaded vs sync) and for
+    tests that single-step engines by hand.
+
+``run()`` is the compatibility path: submit-all → drain → return
+completed.  It works identically on both backends, so offline callers
+never see the threads.
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
-from collections import defaultdict
 from typing import Any, Dict, List, Optional
 
 from repro.connector.base import Connector
 from repro.connector.mooncake import make_connector
 from repro.core.graph import StageGraph
 from repro.core.request import Request, StageEvent
+from repro.core.worker import StageInput, StageWorker, WorkerMetrics
 from repro.engine.sampling import SamplingParams
 
 
 class Orchestrator:
     def __init__(self, graph: StageGraph, engines: Dict[str, Any],
-                 connectors: Optional[Dict[str, Connector]] = None):
+                 connectors: Optional[Dict[str, Connector]] = None, *,
+                 backend: str = "threaded", queue_capacity: int = 64,
+                 recv_timeout: float = 60.0):
         graph.validate()
+        if backend not in ("threaded", "sync"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.graph = graph
         self.engines = engines
         for name in graph.stages:
@@ -32,29 +53,256 @@ class Orchestrator:
         # one connector instance per backend kind (shared across edges)
         kinds = {e.connector for e in graph.edges}
         self.connectors = connectors or {k: make_connector(k) for k in kinds}
+        self.backend = backend
+        self.queue_capacity = queue_capacity
+        self.recv_timeout = recv_timeout
         self.requests: Dict[int, Request] = {}
         self._outputs_pending: Dict[int, set] = {}
         self.completed: List[Request] = []
+        #: stream of finished Requests, in completion order — the online
+        #: front-end consumes this while the backend keeps serving
+        self.completions: "queue.Queue[Request]" = queue.Queue()
         self._transfer_log: List[dict] = []
+        self._lock = threading.RLock()
+        # ---- threaded backend state ----
+        self._workers: Dict[str, StageWorker] = {}
+        self._stage_metrics = {n: WorkerMetrics() for n in graph.stages}
+        self.edge_stats = {
+            StageGraph.edge_id(e): {"transfers": 0, "backpressure_s": 0.0}
+            for e in graph.edges}
+        self._events: "queue.Queue[tuple]" = queue.Queue()
+        self._unrouted = 0
+        self._counter_lock = threading.Lock()
+        self._router_thread: Optional[threading.Thread] = None
+        self._router_stop = threading.Event()
+        self._started = False
 
     # ------------------------------------------------------------------
+    def _sp(self, req: Request) -> SamplingParams:
+        return (SamplingParams(**req.sampling) if req.sampling
+                else SamplingParams())
+
     def submit(self, request: Request) -> None:
-        self.requests[request.req_id] = request
-        self._outputs_pending[request.req_id] = set(
-            self.graph.output_stages())
+        """Admit one request: its initial inputs go to every source stage.
+        Callable at any time while the threaded backend is serving."""
+        with self._lock:
+            self.requests[request.req_id] = request
+            self._outputs_pending[request.req_id] = set(
+                self.graph.output_stages())
         for src in self.graph.sources():
-            spec = self.graph.stages[src]
-            request.mark_stage_start(src)
-            self.engines[src].enqueue(
-                request.req_id, request.inputs,
-                SamplingParams(**request.sampling) if request.sampling
-                else SamplingParams(),
-                request.data)
+            if self._started:
+                ok = self._workers[src].submit(StageInput(
+                    request, self._sp(request), inputs=request.inputs))
+                if not ok:
+                    self._fail(request, f"admission to {src!r} rejected")
+            else:
+                request.mark_stage_start(src)
+                self.engines[src].enqueue(
+                    request.req_id, request.inputs, self._sp(request),
+                    request.data)
 
     # ------------------------------------------------------------------
+    # threaded backend lifecycle
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        """Spin up one worker thread per stage plus the router thread."""
+        if self.backend != "threaded":
+            raise RuntimeError("start() requires backend='threaded'")
+        if self._started:
+            return
+        self._router_stop = threading.Event()
+        self._workers = {
+            name: StageWorker(name, self.engines[name], self._emit,
+                              capacity=self.queue_capacity,
+                              metrics=self._stage_metrics[name])
+            for name in self.graph.stages}
+        self._started = True
+        for w in self._workers.values():
+            w.start()
+        self._router_thread = threading.Thread(
+            target=self._router_loop, name="stage-router", daemon=True)
+        self._router_thread.start()
+
+    def _emit(self, stage: str, ev: StageEvent) -> None:
+        with self._counter_lock:
+            self._unrouted += 1
+        self._events.put((stage, ev))
+
+    def _router_loop(self) -> None:
+        while True:
+            try:
+                stage, ev = self._events.get(timeout=0.01)
+            except queue.Empty:
+                if self._router_stop.is_set():
+                    break
+                continue
+            try:
+                self._route(ev)
+            except Exception as e:  # noqa: BLE001 — isolate to the request
+                req = self.requests.get(ev.req_id)
+                if req is not None:
+                    self._fail(req, f"router: {type(e).__name__}: {e}")
+            finally:
+                with self._counter_lock:
+                    self._unrouted -= 1
+
+    @property
+    def worker_error(self) -> Optional[str]:
+        """First fatal stage-engine failure, if any — online front-ends
+        should poll this instead of waiting out their time limit."""
+        return next((w.error for w in self._workers.values() if w.error),
+                    None)
+
+    def _quiescent(self) -> bool:
+        with self._counter_lock:
+            if self._unrouted:
+                return False
+        if any(w.active or not w.inbox.empty()
+               for w in self._workers.values()):
+            return False
+        return not any(self.engines[n].has_work for n in self.graph.stages)
+
+    def drain(self, timeout: Optional[float] = None,
+              poll: float = 0.005) -> bool:
+        """Block until every submitted request completed (True) or the
+        system quiesces with requests still unfinished / timeout (False)."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        quiet = 0
+        while True:
+            with self._lock:
+                done = all(r.completion_time is not None
+                           for r in self.requests.values())
+            if done:
+                return True
+            if self.worker_error:
+                raise RuntimeError(
+                    f"stage worker died: {self.worker_error}")
+            if deadline is not None and time.perf_counter() > deadline:
+                return False
+            # a request can legitimately never complete (e.g. a transfer fn
+            # filtered its only event) — exit once nothing is in flight,
+            # like the lock-step loop's "engines idle" exit
+            if self._quiescent():
+                quiet += 1
+                if quiet >= 3:
+                    return False
+            else:
+                quiet = 0
+            time.sleep(poll)
+
+    def shutdown(self, drain: bool = True) -> None:
+        """Stop workers (upstream-first when draining, so final events
+        cascade downstream) and then the router."""
+        if not self._started:
+            return
+        for name in self.graph.topo_order():
+            w = self._workers[name]
+            w.stop(drain=drain)
+            w.join(timeout=30.0)
+            while drain:  # flush this stage's last events downstream
+                with self._counter_lock:
+                    if self._unrouted == 0:
+                        break
+                time.sleep(0.002)
+        self._router_stop.set()
+        if self._router_thread is not None:
+            self._router_thread.join(timeout=30.0)
+        self._started = False
+
+    # ------------------------------------------------------------------
+    # routing (runs on the router thread, or on the caller in sync mode)
+    # ------------------------------------------------------------------
+    def _fail(self, req: Request, msg: str) -> None:
+        with self._lock:
+            if req.completion_time is not None:
+                req.failed = req.failed or msg
+                return
+            req.failed = msg
+            req.completion_time = time.perf_counter()
+            self._outputs_pending.pop(req.req_id, None)
+            self.completed.append(req)
+        self.completions.put(req)
+
+    def _finish(self, req: Request) -> None:
+        with self._lock:
+            req.completion_time = time.perf_counter()
+            self._outputs_pending.pop(req.req_id, None)
+            self.completed.append(req)
+        self.completions.put(req)
+
+    @staticmethod
+    def _apply_transfer(edge, req: Request, payload, kind: str,
+                        chunk_index: int, is_last: bool):
+        """Edge transfer + chunk metadata defaulting — the ONE place both
+        the sync path and the worker-side resolve closure go through."""
+        inputs = edge.transfer(req.data, payload)
+        if inputs is None:
+            return None                       # transfer fn filtered this event
+        if kind == "chunk":
+            inputs.setdefault("chunk_index", chunk_index)
+            inputs.setdefault("is_last_chunk", is_last)
+        return inputs
+
+    def _forward(self, edge, req: Request, ev: StageEvent) -> None:
+        conn = self.connectors[edge.connector]
+        eid = StageGraph.edge_id(edge)
+        key = f"{eid}/{req.req_id}/{ev.chunk_index}"
+        self._transfer_log.append({
+            "edge": eid, "connector": edge.connector, "req_id": req.req_id})
+        if self._started:
+            # upstream side publishes; the destination worker receives,
+            # deserializes and applies the transfer in ITS thread
+            conn.send(key, ev.payload)
+            kind, chunk_index, is_last = ev.kind, ev.chunk_index, ev.is_last
+            recv_timeout = self.recv_timeout
+
+            def resolve(conn=conn, key=key, edge=edge, req=req, kind=kind,
+                        chunk_index=chunk_index, is_last=is_last):
+                try:
+                    payload = conn.recv(key, timeout=recv_timeout)
+                finally:
+                    conn.release(key)
+                return self._apply_transfer(edge, req, payload, kind,
+                                            chunk_index, is_last)
+
+            item = StageInput(req, self._sp(req), resolve=resolve,
+                              origin=f"transfer {eid}",
+                              cleanup=lambda: conn.release(key))
+            t0 = time.perf_counter()
+            ok = self._workers[edge.dst].submit(item)
+            es = self.edge_stats[eid]
+            es["transfers"] += 1
+            es["backpressure_s"] += time.perf_counter() - t0
+            if not ok:
+                conn.release(key)             # never delivered: end lifetime
+                self._fail(req, f"{eid}: downstream worker unavailable")
+            return
+        # ---- sync (lock-step) path ----
+        conn.put(key, ev.payload)
+        payload = conn.get(key)
+        conn.delete(key)
+        self.edge_stats[eid]["transfers"] += 1
+        try:
+            inputs = self._apply_transfer(edge, req, payload, ev.kind,
+                                          ev.chunk_index, ev.is_last)
+        except Exception as e:
+            # a broken user transfer fn fails THIS request, not the
+            # serving loop: mark failed + complete so callers unblock
+            self._fail(req, f"transfer {eid}: {type(e).__name__}: {e}")
+            return
+        if inputs is None:
+            return
+        req.mark_stage_start(edge.dst)
+        self.engines[edge.dst].enqueue(req.req_id, inputs, self._sp(req),
+                                       req.data)
+
     def _route(self, ev: StageEvent) -> None:
         req = self.requests[ev.req_id]
         stage = ev.stage
+        if ev.kind == "error":
+            # fault isolation: the failing stage input killed one request
+            self._fail(req, str(ev.payload.get("error", "stage error")))
+            return
         if ev.kind == "finished":
             req.mark_stage_end(stage)
         for edge in self.graph.out_edges(stage):
@@ -63,42 +311,11 @@ class Orchestrator:
             if ev.kind == "finished" and edge.streaming and ev.payload.get(
                     "n_chunks", 0) > 0:
                 continue                      # chunks already forwarded
-            conn = self.connectors[edge.connector]
-            key = f"{edge.src}->{edge.dst}/{req.req_id}/{ev.chunk_index}"
-            conn.put(key, ev.payload)
-            payload = conn.get(key)
-            conn.delete(key)
-            self._transfer_log.append({
-                "edge": f"{edge.src}->{edge.dst}",
-                "connector": edge.connector,
-                "req_id": req.req_id,
-            })
-            try:
-                inputs = edge.transfer(req.data, payload)
-            except Exception as e:
-                # a broken user transfer fn fails THIS request, not the
-                # serving loop: mark failed + complete so callers unblock
-                req.failed = (f"transfer {edge.src}->{edge.dst}: "
-                              f"{type(e).__name__}: {e}")
-                req.completion_time = time.perf_counter()
-                self._outputs_pending.pop(req.req_id, None)
-                self.completed.append(req)
-                continue
-            if inputs is None:
-                continue                      # transfer fn filtered this event
-            if ev.kind == "chunk":
-                inputs.setdefault("chunk_index", ev.chunk_index)
-                inputs.setdefault("is_last_chunk", ev.is_last)
-            dst = self.graph.stages[edge.dst]
-            req.mark_stage_start(edge.dst)
-            self.engines[edge.dst].enqueue(
-                req.req_id, inputs,
-                SamplingParams(**req.sampling) if req.sampling
-                else SamplingParams(),
-                req.data)
+            if req.completion_time is not None and req.failed:
+                break                         # request already failed
+            self._forward(edge, req, ev)
 
         # terminal output collection
-        spec = self.graph.stages[stage]
         outs = self._outputs_pending.get(ev.req_id)
         if outs is None or stage not in outs:
             return
@@ -109,14 +326,20 @@ class Orchestrator:
             req.mark_stage_end(stage)
             outs.discard(stage)
             if not outs:
-                req.completion_time = time.perf_counter()
-                self.completed.append(req)
+                self._finish(req)
         elif ev.kind == "chunk":
             req.outputs.setdefault(stage, []).append(ev.payload)
 
     # ------------------------------------------------------------------
+    # lock-step compat path
+    # ------------------------------------------------------------------
     def tick(self) -> int:
-        """Step every engine once; returns number of events processed."""
+        """Step every engine once; returns number of events processed.
+        Only valid while the threaded backend is NOT running."""
+        if self._started:
+            raise RuntimeError(
+                "tick() is the lock-step path; shutdown() the threaded "
+                "backend first")
         n = 0
         for name in self.graph.topo_order():
             for ev in self.engines[name].step():
@@ -125,20 +348,40 @@ class Orchestrator:
                 n += 1
         return n
 
-    def run(self, max_ticks: int = 100_000) -> List[Request]:
-        for _ in range(max_ticks):
-            if all(r.completion_time is not None
-                   for r in self.requests.values()):
-                break
-            busy = any(self.engines[n].has_work for n in self.graph.stages)
-            self.tick()
-            if not busy:
-                break
+    def run(self, max_ticks: int = 100_000,
+            timeout: Optional[float] = None) -> List[Request]:
+        """Compatibility path: drain everything submitted so far and
+        return the completed requests (offline inference)."""
+        if self.backend == "sync":
+            for _ in range(max_ticks):
+                if all(r.completion_time is not None
+                       for r in self.requests.values()):
+                    break
+                busy = any(self.engines[n].has_work
+                           for n in self.graph.stages)
+                self.tick()
+                if not busy:
+                    break
+            return self.completed
+        self.start()
+        try:
+            self.drain(timeout=timeout)
+        finally:
+            # always tear the threads down, even when drain() raises on a
+            # dead worker — otherwise the backend stays _started forever
+            self.shutdown(drain=False)
         return self.completed
 
     # ------------------------------------------------------------------
     def stage_busy_times(self) -> Dict[str, float]:
         return {n: getattr(self.engines[n], "busy_time", 0.0)
+                for n in self.graph.stages}
+
+    def stage_metrics(self) -> Dict[str, Dict[str, float]]:
+        """Per-stage serving metrics: queueing delay, busy fraction,
+        throughput, inbox high-water mark."""
+        return {n: self._stage_metrics[n].snapshot(
+                    busy_time=getattr(self.engines[n], "busy_time", 0.0))
                 for n in self.graph.stages}
 
     def connector_stats(self) -> Dict[str, Any]:

@@ -27,6 +27,9 @@ class Request:
     completion_time: Optional[float] = None
     first_output_time: Optional[float] = None   # TTFT of the FINAL output
     stage_spans: Dict[str, List[float]] = field(default_factory=dict)
+    # per-stage queueing delays (submit -> engine admission), seconds; a
+    # stage fed by a streaming edge collects one sample per chunk
+    queue_delays: Dict[str, List[float]] = field(default_factory=dict)
     # final outputs per output-stage
     outputs: Dict[str, Any] = field(default_factory=dict)
     failed: Optional[str] = None
@@ -49,6 +52,13 @@ class Request:
         if not span or span[1] is None:
             return 0.0
         return span[1] - span[0]
+
+    def note_queue_delay(self, stage: str, delay: float) -> None:
+        self.queue_delays.setdefault(stage, []).append(delay)
+
+    def queue_delay(self, stage: str) -> float:
+        """Total time this request spent queued in front of ``stage``."""
+        return float(sum(self.queue_delays.get(stage, ())))
 
 
 @dataclass

@@ -16,12 +16,46 @@ DiT, an encoder, or a custom module), declared with:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import (Any, Callable, Dict, List, Optional, Protocol,
+                    runtime_checkable)
+
+from repro.core.request import StageEvent
 
 # preprocess(request_data: dict, model_inputs: dict) -> dict
 PreprocessFn = Callable[[Dict[str, Any], Dict[str, Any]], Dict[str, Any]]
 # transfer(request_data: dict, payload: Any) -> dict  (downstream inputs)
 TransferFn = Callable[[Dict[str, Any], Any], Dict[str, Any]]
+
+
+@runtime_checkable
+class StageEngine(Protocol):
+    """What a stage execution engine must provide to be served.
+
+    The contract the disaggregated backend relies on:
+
+      - ``enqueue`` and ``step`` are only ever called from ONE thread (the
+        stage's worker thread, or the main thread on the lock-step compat
+        path) — engines need no internal locking;
+      - ``step`` executes at most one iteration of work (one scheduler
+        plan, one denoising batch, ...) and returns the StageEvents it
+        produced: finished outputs, streamed chunks;
+      - ``has_work`` is cheap and may be read from other threads for
+        quiescence detection (it is advisory there — the worker's own
+        thread re-checks before sleeping).
+    """
+
+    name: str
+
+    def enqueue(self, req_id: int, inputs: Dict[str, Any], sampling: Any,
+                data: Dict[str, Any]) -> None: ...
+
+    def step(self) -> List[StageEvent]: ...
+
+    @property
+    def has_work(self) -> bool: ...
+
+    @property
+    def queue_depth(self) -> int: ...
 
 
 @dataclass

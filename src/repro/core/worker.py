@@ -1,0 +1,264 @@
+"""Per-stage execution workers (paper §3.1: fully disaggregated stages).
+
+A :class:`StageWorker` owns exactly one stage engine and runs it in a
+dedicated thread, so every stage of an any-to-any pipeline batches and
+steps independently — a slow DiT stage no longer stalls the AR decoder in
+front of it.  The worker's interface to the rest of the system is two
+queues:
+
+  - **inbox** — bounded queue of :class:`StageInput` items.  Bounded puts
+    are the per-edge backpressure mechanism: when a consumer stage falls
+    behind, the router blocks on (and accounts for) the full inbox instead
+    of buffering unboundedly.
+  - **emit** — callback onto the router's event queue; every StageEvent
+    the engine produces is forwarded there.
+
+Inputs can carry either resolved model inputs or a lazy ``resolve``
+closure (connector ``recv`` + edge transfer), so payload deserialization
+runs in the *destination* stage's thread, overlapping transfers with other
+stages' compute.
+
+Lifecycle: ``start`` → (``submit`` | engine steps)* → ``stop(drain=...)``
+→ ``join``.  ``stop(drain=True)`` lets the worker finish everything
+already admitted or queued; ``drain=False`` exits after the current step.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.request import Request, StageEvent
+
+
+@dataclass
+class StageInput:
+    """One unit of admission into a stage engine."""
+    request: Request
+    sampling: Any                                   # SamplingParams
+    inputs: Optional[Dict[str, Any]] = None         # resolved inputs, or
+    resolve: Optional[Callable[[], Optional[dict]]] = None  # lazy recv+transfer
+    origin: str = "admission"                       # edge id or "admission"
+    # run if the item is discarded unadmitted (e.g. non-draining shutdown):
+    # releases the connector entry the resolve closure would have consumed
+    cleanup: Optional[Callable[[], None]] = None
+    t_submit: float = field(default_factory=time.perf_counter)
+
+
+class WorkerMetrics:
+    """Per-stage serving metrics; survives worker restarts (the
+    orchestrator passes the same object into each generation of worker)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.queue_delays: List[float] = []
+        self.admitted = 0
+        self.filtered = 0
+        self.finished = 0
+        self.events = 0
+        self.steps = 0
+        self.errors = 0
+        self.max_inbox_depth = 0
+        self.first_active: Optional[float] = None
+        self.last_active: Optional[float] = None
+
+    def note_admit(self, delay: float) -> None:
+        with self._lock:
+            self.queue_delays.append(delay)
+            self.admitted += 1
+
+    def note_active(self) -> None:
+        now = time.perf_counter()
+        with self._lock:
+            if self.first_active is None:
+                self.first_active = now
+            self.last_active = now
+
+    def note_depth(self, depth: int) -> None:
+        with self._lock:
+            self.max_inbox_depth = max(self.max_inbox_depth, depth)
+
+    def snapshot(self, busy_time: float = 0.0) -> Dict[str, float]:
+        with self._lock:
+            qd = np.asarray(self.queue_delays, np.float64)
+            span = ((self.last_active - self.first_active)
+                    if self.first_active is not None else 0.0)
+            return {
+                "admitted": self.admitted,
+                "filtered": self.filtered,
+                "finished": self.finished,
+                "events": self.events,
+                "steps": self.steps,
+                "errors": self.errors,
+                "max_inbox_depth": self.max_inbox_depth,
+                "queue_delay_mean": float(qd.mean()) if qd.size else 0.0,
+                "queue_delay_p50": (float(np.percentile(qd, 50))
+                                    if qd.size else 0.0),
+                "queue_delay_p95": (float(np.percentile(qd, 95))
+                                    if qd.size else 0.0),
+                "busy_time": busy_time,
+                "active_span": span,
+                "busy_frac": (busy_time / span) if span > 0 else 0.0,
+                "finished_per_s": (self.finished / span) if span > 0 else 0.0,
+            }
+
+
+class StageWorker:
+    """Runs one StageEngine in its own thread with an inbox/emit loop."""
+
+    _IDLE_WAIT = 0.02            # idle block on the inbox (stop() wakes it)
+
+    def __init__(self, name: str, engine: Any,
+                 emit: Callable[[str, StageEvent], None], *,
+                 capacity: int = 64,
+                 metrics: Optional[WorkerMetrics] = None) -> None:
+        self.name = name
+        self.engine = engine
+        self.emit = emit
+        self.inbox: "queue.Queue[Optional[StageInput]]" = queue.Queue(
+            maxsize=capacity)
+        self.metrics = metrics or WorkerMetrics()
+        self.error: Optional[str] = None            # fatal engine failure
+        self._stop = threading.Event()
+        self._drain_on_stop = True
+        self._stepping = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name=f"stage-{name}", daemon=True)
+        self._started = False
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> None:
+        if not self._started:
+            self._started = True
+            self._thread.start()
+
+    def stop(self, drain: bool = True) -> None:
+        self._drain_on_stop = drain
+        self._stop.set()
+        try:                                 # wake an idle-blocked loop
+            self.inbox.put_nowait(None)
+        except queue.Full:
+            pass
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if self._started:
+            self._thread.join(timeout)
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    @property
+    def active(self) -> bool:
+        """True while the worker is admitting or stepping (quiescence)."""
+        return self._stepping
+
+    # -- producer side -----------------------------------------------------
+    def submit(self, item: StageInput,
+               timeout: Optional[float] = None) -> bool:
+        """Bounded put → per-edge backpressure. Blocks until space (or
+        ``timeout``); returns False if the worker stopped or timed out."""
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        while True:
+            try:
+                self.inbox.put(item, timeout=0.05)
+                self.metrics.note_depth(self.inbox.qsize())
+                return True
+            except queue.Full:
+                # a stopped or crashed worker will never drain its inbox —
+                # report unavailable instead of blocking the router forever
+                if self._stop.is_set() or self.error is not None or (
+                        self._started and not self._thread.is_alive()):
+                    return False
+                if deadline is not None and time.perf_counter() > deadline:
+                    return False
+
+    # -- worker thread -----------------------------------------------------
+    def _admit(self, item: StageInput) -> None:
+        req = item.request
+        delay = time.perf_counter() - item.t_submit
+        self.metrics.note_admit(delay)
+        req.note_queue_delay(self.name, delay)
+        try:
+            inputs = item.inputs
+            if item.resolve is not None:
+                inputs = item.resolve()
+            if inputs is None:               # transfer fn filtered this event
+                self.metrics.filtered += 1
+                return
+            req.mark_stage_start(self.name)
+            self.engine.enqueue(req.req_id, inputs, item.sampling, req.data)
+        except Exception as e:               # noqa: BLE001 — fault isolation
+            self.metrics.errors += 1
+            self.emit(self.name, StageEvent(
+                req.req_id, "error",
+                {"error": f"{item.origin}: {type(e).__name__}: {e}"},
+                stage=self.name))
+
+    def _loop(self) -> None:
+        eng = self.engine
+        while True:
+            drained = 0
+            while True:                      # drain the inbox
+                try:
+                    if drained == 0 and not eng.has_work:
+                        item = self.inbox.get(timeout=self._IDLE_WAIT)
+                    else:
+                        item = self.inbox.get_nowait()
+                except queue.Empty:
+                    break
+                drained += 1
+                if item is not None:
+                    self._stepping = True
+                    self.metrics.note_active()
+                    self._admit(item)
+                    self._stepping = False
+            if self._stop.is_set():
+                if (not self._drain_on_stop
+                        or (self.inbox.empty() and not eng.has_work)):
+                    break
+            if not eng.has_work:
+                continue
+            self._stepping = True
+            self.metrics.note_active()
+            try:
+                events = eng.step()
+            except Exception as e:           # noqa: BLE001 — engine died
+                self.error = f"{type(e).__name__}: {e}"
+                self._stepping = False
+                break
+            self.metrics.steps += 1
+            for ev in events:
+                ev.stage = ev.stage or self.name
+                self.metrics.events += 1
+                # one request-finish per request: the last streamed chunk,
+                # or a "finished" event that wasn't preceded by chunks (an
+                # AR stage that streamed emits BOTH — count it once)
+                streamed = (isinstance(ev.payload, dict)
+                            and ev.payload.get("n_chunks", 0) > 0)
+                if (ev.kind == "finished" and not streamed) or (
+                        ev.kind == "chunk" and ev.is_last):
+                    self.metrics.finished += 1
+                self.emit(self.name, ev)
+            self.metrics.note_active()
+            self._stepping = False
+        self._discard_inbox()
+
+    def _discard_inbox(self) -> None:
+        """On a non-draining (or aborted) exit, run queued items' cleanups
+        so connector entries they would have consumed are released."""
+        while True:
+            try:
+                item = self.inbox.get_nowait()
+            except queue.Empty:
+                return
+            if item is not None and item.cleanup is not None:
+                try:
+                    item.cleanup()
+                except Exception:            # noqa: BLE001 — best effort
+                    pass

@@ -130,6 +130,11 @@ class AREngine:
     def has_work(self) -> bool:
         return self.scheduler.has_work
 
+    @property
+    def queue_depth(self) -> int:
+        """Admitted-but-unfinished plus waiting requests (StageEngine)."""
+        return len(self.scheduler.waiting) + len(self.scheduler.running)
+
     # ------------------------------------------------------------------
     def _sample(self, req_id: int, logits: jax.Array) -> int:
         sp = self.scheduler.running[req_id].sampling

@@ -69,6 +69,10 @@ class DiffusionEngine:
     def has_work(self) -> bool:
         return bool(self.queue)
 
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
     def _sampler(self, cond_len: int, out_len: int):
         key = (cond_len, out_len)
         if key not in self._sample_cache:
@@ -131,6 +135,10 @@ class EncodeEngine:
     @property
     def has_work(self) -> bool:
         return bool(self.queue)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
 
     def step(self) -> List[StageEvent]:
         events: List[StageEvent] = []

@@ -1,16 +1,23 @@
 """Serving launcher.
 
-Two modes:
-  - pipeline: serve an any-to-any stage-graph pipeline (the paper's case)
+Three modes:
+  - pipeline (offline): serve an any-to-any stage-graph pipeline through
+    the per-stage-worker backend, batch-submitted at t=0
       PYTHONPATH=src python -m repro.launch.serve --pipeline qwen_omni \
           --requests 8 --max-batch 4
-  - single:   serve one assigned architecture (smoke-scale) as a 1-stage graph
+  - pipeline --online: Poisson arrivals + admission control + streaming
+    result consumption — each stage batches independently in its own
+    worker thread while the front-end keeps admitting
+      PYTHONPATH=src python -m repro.launch.serve --pipeline qwen_omni \
+          --online --requests 16 --rate 4.0 --max-inflight 8
+  - single: serve one assigned architecture (smoke-scale) as a 1-stage graph
       PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b \
           --requests 4
 """
 from __future__ import annotations
 
 import argparse
+import queue
 import time
 
 import jax
@@ -20,6 +27,7 @@ from repro.configs.base import get_config
 from repro.configs.pipelines import _kv, build_ar_dit, build_mimo_audio, \
     build_qwen_omni
 from repro.core.graph import StageGraph
+from repro.core.metrics import stage_report, summarize, summarize_queueing
 from repro.core.orchestrator import Orchestrator
 from repro.core.request import Request
 from repro.core.stage import StageSpec
@@ -39,6 +47,67 @@ def build_single_arch(arch: str, max_batch: int, max_new: int, seed: int = 0):
     return graph, {arch: eng}, {"cfg": cfg}
 
 
+def _make_inputs(pipeline, rng):
+    if pipeline == "mimo_audio":
+        return {"audio": rng.standard_normal((32, 16)).astype(np.float32)}
+    return {"tokens": rng.integers(0, 200, size=int(
+        rng.integers(6, 24))).astype(np.int32)}
+
+
+def serve_online(orch: Orchestrator, pipeline, *, n_requests: int,
+                 rate_hz: float, max_inflight: int, seed: int = 0,
+                 time_limit: float = 300.0, verbose: bool = True):
+    """Online front-end: Poisson arrivals, admission control (at most
+    ``max_inflight`` requests in the backend; later arrivals wait in the
+    admission queue), streaming consumption of completions as they finish.
+
+    Request.arrival_time is stamped at the Poisson arrival instant, so JCT
+    and TTFT include any admission-control wait.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / max(rate_hz, 1e-9),
+                                         size=n_requests))
+    inputs = [_make_inputs(pipeline, rng) for _ in range(n_requests)]
+
+    orch.start()
+    t0 = time.perf_counter()
+    reqs, admission_q = [], []
+    submitted = done = i = 0
+    while done < n_requests:
+        now = time.perf_counter() - t0
+        while i < n_requests and arrivals[i] <= now:
+            reqs.append(Request(inputs=inputs[i]))     # arrival stamp = now
+            admission_q.append(reqs[-1])
+            i += 1
+        # admission control: bound the work resident in the backend
+        while admission_q and submitted - done < max_inflight:
+            orch.submit(admission_q.pop(0))
+            submitted += 1
+        try:                                   # streaming result consumption
+            r = orch.completions.get(timeout=0.005)
+            done += 1
+            if verbose:
+                state = "FAILED " + r.failed if r.failed else "ok"
+                ttft = (r.first_output_time - r.arrival_time
+                        if r.first_output_time else float("nan"))
+                print(f"  req {r.req_id}: jct={r.jct:.3f}s ttft={ttft:.3f}s "
+                      f"[{state}]")
+        except queue.Empty:
+            pass
+        if orch.worker_error:                  # fail fast on a dead stage
+            print(f"stage worker died: {orch.worker_error} "
+                  f"({done}/{n_requests} served)")
+            break
+        if time.perf_counter() - t0 > time_limit:
+            print(f"time limit {time_limit}s hit with {done}/{n_requests}")
+            break
+    wall = time.perf_counter() - t0
+    # nothing is in flight on the normal exit; on the abnormal exits we
+    # must NOT block draining a backlog past the measurement window
+    orch.shutdown(drain=False)
+    return reqs, wall
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pipeline", default=None,
@@ -49,6 +118,17 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="threaded",
+                    choices=["threaded", "sync"],
+                    help="threaded = per-stage workers (default); "
+                         "sync = lock-step ablation baseline")
+    ap.add_argument("--online", action="store_true",
+                    help="Poisson arrivals + admission control + streaming "
+                         "result consumption (threaded backend only)")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="--online arrival rate (req/s)")
+    ap.add_argument("--max-inflight", type=int, default=8,
+                    help="--online admission control limit")
     args = ap.parse_args()
 
     if args.pipeline == "qwen_omni":
@@ -71,28 +151,43 @@ def main() -> None:
     else:
         ap.error("pass --pipeline or --arch")
 
-    orch = Orchestrator(graph, engines)
+    orch = Orchestrator(graph, engines, backend=args.backend)
     rng = np.random.default_rng(args.seed)
-    t0 = time.perf_counter()
-    reqs = []
-    for _ in range(args.requests):
-        if args.pipeline == "mimo_audio":
-            inputs = {"audio": rng.standard_normal((32, 16)).astype(np.float32)}
-        else:
-            inputs = {"tokens": rng.integers(0, 200, size=int(
-                rng.integers(6, 24))).astype(np.int32)}
-        reqs.append(Request(inputs=inputs))
-        orch.submit(reqs[-1])
-    done = orch.run()
-    wall = time.perf_counter() - t0
-    from repro.core.metrics import summarize
+
+    if args.online:
+        if args.backend != "threaded":
+            ap.error("--online requires --backend threaded")
+        reqs, wall = serve_online(
+            orch, args.pipeline, n_requests=args.requests,
+            rate_hz=args.rate, max_inflight=args.max_inflight,
+            seed=args.seed)
+    else:
+        t0 = time.perf_counter()
+        if args.backend == "threaded":
+            orch.start()          # admissions route through stage workers
+        reqs = []
+        for _ in range(args.requests):
+            reqs.append(Request(inputs=_make_inputs(args.pipeline, rng)))
+            orch.submit(reqs[-1])
+        orch.run()
+        wall = time.perf_counter() - t0
+
     m = summarize(reqs, wall_time=wall)
+    done = [r for r in reqs if r.completion_time is not None]
     print(f"completed {len(done)}/{args.requests} requests "
-          f"in {wall:.2f}s  ({m['req_per_s']:.2f} req/s)")
+          f"in {wall:.2f}s  ({m['req_per_s']:.2f} req/s)  "
+          f"backend={args.backend}")
     print(f"JCT p50={m['jct_p50']:.3f}s p95={m['jct_p95']:.3f}s  "
           f"TTFT p50={m['ttft_p50']:.3f}s")
-    print("stage busy:", {k: round(v, 3)
-                          for k, v in orch.stage_busy_times().items()})
+    if args.backend == "threaded":
+        print(stage_report(orch.stage_metrics()))
+        qd = summarize_queueing(reqs)
+        if qd:
+            print("per-request queueing delay:",
+                  {k: f"p95={v['p95']*1e3:.2f}ms" for k, v in qd.items()})
+    else:
+        print("stage busy:", {k: round(v, 3)
+                              for k, v in orch.stage_busy_times().items()})
     for kind, st in orch.connector_stats().items():
         print(f"connector[{kind}]: {st.calls} transfers, {st.bytes} bytes, "
               f"{st.wall_time*1e3:.2f} ms wall")

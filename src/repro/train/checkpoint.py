@@ -36,7 +36,7 @@ def load(path: str, params_template, opt_template=None):
     data = np.load(path)
 
     def restore(template, prefix):
-        flat_t, treedef = jax.tree.flatten_with_path(template)
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
         for path_keys, leaf in flat_t:
             key = prefix + "/".join(_key_str(k) for k in path_keys)

@@ -1,4 +1,7 @@
-"""Connector round-trip + stats tests (incl. hypothesis payload sweep)."""
+"""Connector round-trip + stats + async channel tests (incl. hypothesis
+payload sweep)."""
+import time
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
@@ -54,3 +57,54 @@ def test_keys_are_independent():
     conn.put("b", np.zeros(3))
     np.testing.assert_array_equal(conn.get("a"), np.ones(3))
     np.testing.assert_array_equal(conn.get("b"), np.zeros(3))
+
+
+# ---- async channel API (send -> handle, recv blocks, release evicts) ------
+
+@pytest.mark.parametrize("kind", ["inline", "shm", "mooncake"])
+def test_channel_recv_blocks_until_send(kind):
+    import threading
+    conn = make_connector(kind)
+    got = {}
+
+    def consumer():
+        got["v"] = conn.recv("k", timeout=5.0)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.02)                       # consumer is already waiting
+    handle = conn.send("k", {"a": np.arange(4, dtype=np.int32)})
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    np.testing.assert_array_equal(got["v"]["a"], np.arange(4))
+    assert handle.key == "k" and handle.nbytes >= 16
+    assert conn.poll("k")
+    conn.release("k")
+    assert not conn.poll("k") and conn.metadata("k") is None
+
+
+def test_channel_recv_timeout():
+    conn = make_connector("inline")
+    with pytest.raises(TimeoutError):
+        conn.recv("never-sent", timeout=0.01)
+
+
+def test_shm_pool_accounting_tracks_lifetimes():
+    conn = make_connector("shm")
+    conn.send("a", np.ones(100, np.float64))           # 800 B resident
+    conn.send("b", np.ones(50, np.float64))            # +400 B
+    assert conn.resident_bytes == 1200
+    conn.release("a")
+    assert conn.resident_bytes == 400
+    assert conn.peak_resident_bytes == 1200
+    conn.release("b")
+    assert conn.resident_bytes == 0
+
+
+def test_mooncake_resident_object_accounting():
+    conn = MooncakeConnector()
+    conn.send("a", np.ones(3))
+    conn.send("b", np.ones(3))
+    conn.release("a")
+    assert conn.resident_objects == 1
+    assert conn.peak_resident_objects == 2

@@ -32,7 +32,15 @@ with distribution(DistContext(mesh=mesh, moe_impl="ep")):
 
 np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref),
                            rtol=2e-4, atol=2e-4)
-assert abs(float(aux_ep) - float(aux_ref)) < 1e-4, (aux_ep, aux_ref)
+# The aux (load-balance) losses are DIFFERENT estimators, equal only in
+# expectation: the EP path computes sum(frac*prob) per data shard over its
+# T_loc=16 local tokens and pmeans across shards (per-device capacity
+# semantics, see moe_ep.py), while the GSPMD reference computes one global
+# sum over all 32 tokens.  The gap is the cross-shard covariance of
+# (frac, prob), O(1/T_loc) relative — observed ~3e-4 absolute on aux~1e-2.
+# 2e-3 bounds that estimator gap while still catching real routing bugs
+# (a double-count or missing psum shifts aux by >1e-2).
+assert abs(float(aux_ep) - float(aux_ref)) < 2e-3, (aux_ep, aux_ref)
 print("EP-OK")
 """
 
