@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast check serve-online bench-online
+.PHONY: test test-fast check serve-online bench-online bench-smoke
 
 # default pre-commit check: sub-minute smoke subset
 check: test-fast
@@ -20,3 +20,9 @@ serve-online:
 # concurrent-stage vs lock-step comparison with a slowed stage
 bench-online:
 	$(PY) -m benchmarks.bench_online
+
+# sub-minute benchmark smoke: online serving + prefix caching, JSON out
+bench-smoke:
+	$(PY) -m benchmarks.bench_prefix_cache --smoke \
+	    --json BENCH_prefix_cache.json
+	$(PY) -m benchmarks.bench_online --smoke --json BENCH_online.json

@@ -120,6 +120,23 @@ def run(n_requests: int = 12, rate_hz: float = 8.0, slow_ms: float = 60.0,
     ]
 
 
-if __name__ == "__main__":
-    for r in run():
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny settings for the pre-commit bench tier")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="also write machine-readable rows")
+    args = ap.parse_args()
+    kw = (dict(n_requests=6, rate_hz=8.0, slow_ms=20.0) if args.smoke
+          else {})
+    rows = run(**kw)
+    for r in rows:
         print(",".join(map(str, r)))
+    if args.json:
+        from benchmarks.run import write_json
+        write_json(args.json, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,20 +1,39 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  With ``--json OUT.json``
+the same rows are also written as machine-readable JSON (one object per
+row plus a wall-time stamp per harness) so successive PRs can diff
+benchmark trajectories.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...] \
+      [--json BENCH.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+
+
+def write_json(path: str, rows, extra=None) -> None:
+    """Write benchmark rows as JSON records: [{name, us_per_call, derived}]."""
+    recs = [{"name": str(r[0]),
+             "us_per_call": float(r[1]),
+             "derived": str(r[2]) if len(r) > 2 else ""} for r in rows]
+    if extra:
+        recs.extend(extra)
+    with open(path, "w") as f:
+        json.dump(recs, f, indent=1)
+        f.write("\n")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig6,fig7,fig8,table1,two_stage,"
-                         "streaming,roofline")
+                         "streaming,ablation,online,spec,prefix,roofline")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="also write all rows as JSON records")
     args = ap.parse_args()
     sel = set(args.only.split(",")) if args.only else None
 
@@ -46,10 +65,14 @@ def main() -> None:
     if sel is None or "spec" in sel:
         from benchmarks import bench_spec_decode
         benches.append(("spec", bench_spec_decode.run))
+    if sel is None or "prefix" in sel:
+        from benchmarks import bench_prefix_cache
+        benches.append(("prefix", bench_prefix_cache.run))
     if sel is None or "roofline" in sel:
         from benchmarks import roofline
         benches.append(("roofline", roofline.run))
 
+    all_rows = []
     print("name,us_per_call,derived")
     for name, fn in benches:
         t0 = time.perf_counter()
@@ -60,8 +83,12 @@ def main() -> None:
             continue
         for r in rows:
             print(",".join(str(x) for x in r), flush=True)
-        print(f"{name}_harness_wall,{(time.perf_counter()-t0)*1e6:.0f},",
-              flush=True)
+        wall = (time.perf_counter() - t0) * 1e6
+        print(f"{name}_harness_wall,{wall:.0f},", flush=True)
+        all_rows.extend(rows)
+        all_rows.append((f"{name}_harness_wall", wall, ""))
+    if args.json:
+        write_json(args.json, all_rows)
 
 
 if __name__ == "__main__":

@@ -54,7 +54,8 @@ def _kv(max_batch: int, max_seq: int = 256) -> PagedKVConfig:
 def build_qwen_omni(*, max_batch: int = 8, thinker_tokens: int = 24,
                     talker_tokens: int = 72, stream_chunk: int = 16,
                     vocoder_kind: str = "dit", dit_steps: int = 8,
-                    cache_interval: int = 1, seed: int = 0):
+                    cache_interval: int = 1, prefix_cache: bool = False,
+                    seed: int = 0):
     key = jax.random.PRNGKey(seed)
     ks = jax.random.split(key, 4)
     thinker_cfg = tiny_lm("thinker")
@@ -90,13 +91,14 @@ def build_qwen_omni(*, max_batch: int = 8, thinker_tokens: int = 24,
     thinker = AREngine(
         "thinker", thinker_cfg, thinker_params, kv=_kv(max_batch),
         max_batch=max_batch, collect_hidden=True, preprocess=mm_encode,
+        enable_prefix_cache=prefix_cache,
         default_sampling=SamplingParams(max_new_tokens=thinker_tokens,
                                         temperature=0.8, top_k=20),
         seed=seed)
     talker = AREngine(
         "talker", talker_cfg, talker_params, kv=_kv(max_batch),
         max_batch=max_batch, preprocess=talker_preprocess,
-        stream_chunk=stream_chunk,
+        stream_chunk=stream_chunk, enable_prefix_cache=prefix_cache,
         default_sampling=SamplingParams(max_new_tokens=talker_tokens,
                                         temperature=0.8, top_k=20),
         seed=seed + 1)
@@ -172,7 +174,8 @@ def build_qwen_omni(*, max_batch: int = 8, thinker_tokens: int = 24,
 
 def build_ar_dit(name: str = "glm_image", *, max_batch: int = 8,
                  ar_tokens: int = 32, image_latents: int = 64,
-                 dit_steps: int = 8, cache_interval: int = 1, seed: int = 0):
+                 dit_steps: int = 8, cache_interval: int = 1,
+                 prefix_cache: bool = False, seed: int = 0):
     key = jax.random.PRNGKey(seed)
     ks = jax.random.split(key, 3)
     llm_cfg = tiny_lm(f"{name}_llm")
@@ -185,6 +188,7 @@ def build_ar_dit(name: str = "glm_image", *, max_batch: int = 8,
     llm = AREngine(
         f"{name}_llm", llm_cfg, llm_params, kv=_kv(max_batch),
         max_batch=max_batch, collect_hidden=True,
+        enable_prefix_cache=prefix_cache,
         default_sampling=SamplingParams(max_new_tokens=ar_tokens,
                                         temperature=0.8, top_k=20),
         seed=seed)
@@ -215,7 +219,8 @@ def build_ar_dit(name: str = "glm_image", *, max_batch: int = 8,
 
 def build_pd_disaggregated(cfg: ModelConfig = None, *, max_batch: int = 4,
                            max_new: int = 8, temperature: float = 0.0,
-                           connector: str = "shm", seed: int = 0):
+                           connector: str = "shm",
+                           prefix_cache: bool = False, seed: int = 0):
     import jax as _jax
     from repro.models import transformer as _T
     cfg = cfg or tiny_lm("pd_lm", vocab=512)
@@ -223,6 +228,7 @@ def build_pd_disaggregated(cfg: ModelConfig = None, *, max_batch: int = 4,
     prefill = AREngine(
         "prefill", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
         emit_kv=True, collect_hidden=False,
+        enable_prefix_cache=prefix_cache,
         default_sampling=SamplingParams(max_new_tokens=1,
                                         temperature=temperature),
         seed=seed)
@@ -301,7 +307,8 @@ def build_epd_disaggregated(*, max_batch: int = 4, max_new: int = 8,
 # ----------------------------------------------------------------------------
 
 def build_mimo_audio(*, max_batch: int = 8, ar_tokens: int = 48,
-                     patch: int = 4, seed: int = 0):
+                     patch: int = 4, prefix_cache: bool = False,
+                     seed: int = 0):
     key = jax.random.PRNGKey(seed)
     ks = jax.random.split(key, 4)
     llm_cfg = tiny_lm("mimo_llm")
@@ -331,7 +338,7 @@ def build_mimo_audio(*, max_batch: int = 8, ar_tokens: int = 48,
 
     enc = EncodeEngine("patch_enc", encode, max_batch=max_batch)
     llm = AREngine("mimo_llm", llm_cfg, llm_params, kv=_kv(max_batch),
-                   max_batch=max_batch,
+                   max_batch=max_batch, enable_prefix_cache=prefix_cache,
                    default_sampling=SamplingParams(max_new_tokens=ar_tokens,
                                                    temperature=0.8, top_k=20),
                    seed=seed)

@@ -55,6 +55,8 @@ def stage_report(stage_metrics: Dict[str, Dict[str, float]]) -> str:
     cols = ["admitted", "finished", "steps", "busy_time", "busy_frac",
             "finished_per_s", "queue_delay_p50", "queue_delay_p95",
             "max_inbox_depth"]
+    if any("prefix_hit_rate" in m for m in stage_metrics.values()):
+        cols += ["cached_tokens", "computed_tokens", "prefix_hit_rate"]
     head = "stage".ljust(12) + "".join(c.rjust(17) for c in cols)
     lines = [head]
     for stage, m in stage_metrics.items():

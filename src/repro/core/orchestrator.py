@@ -379,10 +379,20 @@ class Orchestrator:
 
     def stage_metrics(self) -> Dict[str, Dict[str, float]]:
         """Per-stage serving metrics: queueing delay, busy fraction,
-        throughput, inbox high-water mark."""
-        return {n: self._stage_metrics[n].snapshot(
-                    busy_time=getattr(self.engines[n], "busy_time", 0.0))
-                for n in self.graph.stages}
+        throughput, inbox high-water mark, prefix-cache hit rates."""
+        out = {}
+        for n in self.graph.stages:
+            m = self._stage_metrics[n].snapshot(
+                busy_time=getattr(self.engines[n], "busy_time", 0.0))
+            ps = getattr(self.engines[n], "prefix_stats", None)
+            if ps is not None and ps.get("lookups"):
+                total = ps["cached_tokens"] + ps["computed_tokens"]
+                m["cached_tokens"] = ps["cached_tokens"]
+                m["computed_tokens"] = ps["computed_tokens"]
+                m["prefix_hit_rate"] = (ps["cached_tokens"] / total
+                                        if total else 0.0)
+            out[n] = m
+        return out
 
     def connector_stats(self) -> Dict[str, Any]:
         return {k: c.stats for k, c in self.connectors.items()}

@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.request import StageEvent
-from repro.engine.kv_cache import PagedKVConfig
+from repro.engine.kv_cache import (PagedKVConfig, hash_embed_blocks,
+                                   hash_token_blocks)
 from repro.engine.runner import PagedRunner, StateRunner
 from repro.engine.sampling import SamplingParams, sample_tokens
 from repro.engine.scheduler import Scheduler
@@ -56,7 +57,7 @@ class AREngine:
                  preprocess: Optional[Callable] = None,
                  stream_chunk: int = 0, collect_hidden: bool = False,
                  default_sampling: Optional[SamplingParams] = None,
-                 emit_kv: bool = False,
+                 emit_kv: bool = False, enable_prefix_cache: bool = False,
                  spec_ngram: Optional[tuple] = None, seed: int = 0):
         self.name = name
         self.cfg = cfg
@@ -74,8 +75,13 @@ class AREngine:
         # rollback is free.
         self.spec_ngram = spec_ngram
         self.spec_stats = {"proposed": 0, "accepted": 0, "steps": 0}
+        # prefix caching needs paged KV: SSM state is not content-sharable
+        self.enable_prefix_cache = (enable_prefix_cache
+                                    and cfg.arch_type not in ("ssm",
+                                                              "hybrid"))
         self.scheduler = Scheduler(self.kv, max_batch, token_budget,
-                                   chunk_size)
+                                   chunk_size,
+                                   enable_prefix_cache=self.enable_prefix_cache)
         if cfg.arch_type in ("ssm", "hybrid"):
             self.runner: Any = StateRunner(cfg, params, self.kv, max_batch)
             self._paged = False
@@ -124,7 +130,23 @@ class AREngine:
                     [np.asarray(extra["prompt_prepend"], pe.dtype), pe], 0)
         rt.prompt_embeds = pe
         self._rt[req_id] = rt
-        self.scheduler.add(req_id, pe.shape[0], sampling)
+        self.scheduler.add(req_id, pe.shape[0], sampling,
+                           block_hashes=self._block_hashes(rt, pe))
+
+    def _block_hashes(self, rt: _ReqRuntime, pe: np.ndarray):
+        """Content-addressed block hashes over the prompt's full pages:
+        token ids when the stage is tokenized and per-request preprocess
+        cannot perturb the prompt; otherwise a bytes digest of the final
+        prompt embeds (covers hidden-state-fed stages and mm prepends)."""
+        if not (self.enable_prefix_cache and self._paged):
+            return None
+        if rt.prompt_tokens is not None and self.preprocess is None:
+            return hash_token_blocks(rt.prompt_tokens, self.kv.page_size)
+        return hash_embed_blocks(pe, self.kv.page_size)
+
+    @property
+    def prefix_stats(self) -> Dict[str, int]:
+        return dict(self.scheduler.prefix_stats)
 
     @property
     def has_work(self) -> bool:
@@ -152,6 +174,20 @@ class AREngine:
             if extra and "extra_embed" in extra:
                 e = e + np.asarray(extra["extra_embed"], e.dtype)
         return e
+
+    def _release(self, req_id: int) -> None:
+        """Release a finished request, first extending its block-hash chain
+        over generated tokens (token stages without per-request decode
+        hooks) so the whole context becomes matchable — a multi-turn
+        follow-up that re-sends this conversation hits every page."""
+        rt = self._rt.pop(req_id)
+        if self.enable_prefix_cache and self._paged \
+                and rt.prompt_tokens is not None and self.preprocess is None:
+            seq = self.scheduler.running[req_id]
+            ctx = rt.prompt_tokens + rt.tokens
+            self.scheduler.set_hashes(
+                req_id, hash_token_blocks(ctx[:seq.pos], self.kv.page_size))
+        self.scheduler.release(req_id)
 
     def _emit_progress(self, req_id: int, events: List[StageEvent],
                        finished: bool) -> None:
@@ -235,8 +271,7 @@ class AREngine:
                 break
         self._emit_progress(rid, events, finished)
         if finished:
-            self.scheduler.release(rid)
-            self._rt.pop(rid)
+            self._release(rid)
         return True
 
     def step(self) -> List[StageEvent]:
@@ -257,6 +292,12 @@ class AREngine:
             if len(gen):
                 rt.prompt_embeds = np.concatenate(
                     [rt.prompt_embeds, np.asarray(self.runner.embed(gen))], 0)
+        # prefix cache copy-on-write: a request whose whole page-aligned
+        # prompt hit the cache gets a private copy of the final shared page
+        # before recomputing (and rewriting) its last token
+        if plan.cow_pairs:
+            self.runner.copy_pages([s for s, _ in plan.cow_pairs],
+                                   [d for _, d in plan.cow_pairs])
         # PD disaggregation: inject transferred KV for newly admitted
         # pre-filled requests before their first decode step
         for rid in plan.admitted:
@@ -304,8 +345,7 @@ class AREngine:
                 finished = self.scheduler.note_sampled(ch.req_id, tok)
                 self._emit_progress(ch.req_id, events, finished)
                 if finished:
-                    self.scheduler.release(ch.req_id)
-                    self._rt.pop(ch.req_id)
+                    self._release(ch.req_id)
 
         # ---- batched decode --------------------------------------------
         dec_ids = [r for r in plan.decode_req_ids
@@ -361,8 +401,7 @@ class AREngine:
                 finished = self.scheduler.note_sampled(rid, tok)
                 self._emit_progress(rid, events, finished)
                 if finished:
-                    self.scheduler.release(rid)
-                    self._rt.pop(rid)
+                    self._release(rid)
 
         self.busy_time += time.perf_counter() - t0
         return events

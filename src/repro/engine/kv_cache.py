@@ -4,51 +4,220 @@ The page pool is a pair of arrays (L, P, page, nkv, hd); sequences own
 pages through int32 block tables. Allocation is a host-side free list; the
 device arrays are only touched inside the jitted step functions.
 
+Automatic prefix caching (vLLM-style): the allocator is refcounted and
+keeps a content-hash -> page index over *full* pages.  A page is always in
+exactly one of three states:
+
+  - **free**: on the free list, content meaningless;
+  - **cached**: refcount 0 but content-indexed; parked in an LRU from
+    which it can be re-acquired by hash (prefix hit) or evicted;
+  - **referenced**: refcount >= 1, held by one or more requests (the same
+    physical page backs every request whose prompt shares the prefix).
+
+Block hashes form a chain — hash_i = H(hash_{i-1}, page_i contents) — so a
+hit on block i implies the whole prefix up to i matches.  Contents are
+token ids for tokenized stages and a bytes digest of the prompt *embeds*
+for stages fed hidden states (Thinker -> Talker), so every AR stage of an
+any-to-any pipeline can prefix-cache.
+
 SSM stages have no KV: their cache is a constant-size recurrent state per
 slot, managed by ``SlotStateCache`` (DESIGN.md §4 — per-stage cache kind).
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 
+BlockHash = Tuple[str, bytes]
+
+
+def _digest(parent: bytes, payload: bytes) -> bytes:
+    return hashlib.blake2b(parent + payload, digest_size=16).digest()
+
+
+def hash_token_blocks(tokens, page_size: int,
+                      parent: bytes = b"") -> List[BlockHash]:
+    """Chained content hashes over the FULL pages of a token sequence."""
+    arr = np.asarray(tokens, np.int64)
+    out: List[BlockHash] = []
+    h = parent
+    for i in range(len(arr) // page_size):
+        h = _digest(h, arr[i * page_size:(i + 1) * page_size].tobytes())
+        out.append(("tok", h))
+    return out
+
+
+def hash_embed_blocks(embeds, page_size: int,
+                      parent: bytes = b"") -> List[BlockHash]:
+    """Chained bytes-digests over the FULL pages of a prompt-embeds matrix
+    (stages whose prompts are hidden states rather than token ids)."""
+    e = np.ascontiguousarray(np.asarray(embeds, np.float32))
+    out: List[BlockHash] = []
+    h = parent
+    for i in range(e.shape[0] // page_size):
+        h = _digest(h, e[i * page_size:(i + 1) * page_size].tobytes())
+        out.append(("emb", h))
+    return out
+
 
 class PageAllocator:
-    def __init__(self, num_pages: int):
+    """Refcounted page allocator with an optional content-addressed
+    prefix cache (``enable_prefix_cache``).  With the cache disabled the
+    behavior is exactly the old free-list allocator (no page is ever
+    hashed, so every released page returns straight to the free list)."""
+
+    def __init__(self, num_pages: int, enable_prefix_cache: bool = False):
         self.num_pages = num_pages
+        self.enable_prefix_cache = enable_prefix_cache
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        # pages held per request, WITH multiplicity: the total multiplicity
+        # of a page across requests equals its refcount
         self._owned: Dict[int, List[int]] = {}
+        self._refcount: Dict[int, int] = {}
+        self._hash_to_page: Dict[BlockHash, int] = {}
+        self._page_hash: Dict[int, BlockHash] = {}
+        # cached pages with refcount 0, oldest first (eviction order)
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self.evictions = 0
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def cached_pages(self) -> int:
+        """Refcount-0 pages retained only for their cached content."""
+        return len(self._lru)
+
+    @property
+    def reusable_pages(self) -> int:
+        return len(self._free) + len(self._lru)
+
+    def refcount(self, page: int) -> int:
+        return self._refcount.get(page, 0)
+
     def pages_owned(self, req_id: int) -> List[int]:
         return self._owned.get(req_id, [])
 
+    # -- allocation ---------------------------------------------------------
+    def _evict_one(self) -> None:
+        page, _ = self._lru.popitem(last=False)       # oldest cached page
+        h = self._page_hash.pop(page)
+        del self._hash_to_page[h]
+        self._free.append(page)
+        self.evictions += 1
+
     def allocate(self, req_id: int, n: int) -> Optional[List[int]]:
-        if len(self._free) < n:
+        """Allocate ``n`` fresh (private, refcount-1) pages, evicting LRU
+        cached pages as needed.  Referenced pages are never evicted."""
+        if len(self._free) + len(self._lru) < n:
             return None
+        while len(self._free) < n:
+            self._evict_one()
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refcount[p] = 1
         self._owned.setdefault(req_id, []).extend(pages)
         return pages
 
+    # -- prefix cache -------------------------------------------------------
+    def lookup(self, hashes: Iterable[BlockHash]) -> List[int]:
+        """Longest cached prefix: pages for the leading run of hashes that
+        are present in the index (no refcounts are taken)."""
+        pages: List[int] = []
+        for h in hashes:
+            p = self._hash_to_page.get(h)
+            if p is None:
+                break
+            pages.append(p)
+        return pages
+
+    def acquire(self, req_id: int, pages: Iterable[int]) -> None:
+        """Take a reference on already-resident pages (a prefix hit, or an
+        extra share).  Refcount-0 cached pages leave the eviction LRU."""
+        owned = self._owned.setdefault(req_id, [])
+        for p in pages:
+            rc = self._refcount.get(p, 0)
+            if rc == 0:
+                self._lru.pop(p)              # must be a cached page
+            self._refcount[p] = rc + 1
+            owned.append(p)
+
+    def publish(self, pages: Iterable[int],
+                hashes: Iterable[BlockHash]) -> None:
+        """Register content hashes for full, KV-complete pages so future
+        requests can reuse them.  First writer wins: a hash already in the
+        index keeps its existing page (the duplicate page stays unhashed
+        and returns to the free list on release)."""
+        if not self.enable_prefix_cache:
+            return
+        for p, h in zip(pages, hashes):
+            if h in self._hash_to_page or p in self._page_hash:
+                continue
+            self._hash_to_page[h] = p
+            self._page_hash[p] = h
+
+    def cow(self, req_id: int, page: int) -> Optional[int]:
+        """Copy-on-write: give ``req_id`` a private writable page standing
+        in for shared/cached ``page`` (which it must already hold).  The
+        reference on the source is retained until ``free(req_id)`` so it
+        cannot be evicted before the caller copies its contents.  Returns
+        the private page, or None if the pool is exhausted."""
+        assert page in self._owned.get(req_id, ()), "CoW of an unheld page"
+        got = self.allocate(req_id, 1)
+        return got[0] if got else None
+
+    # -- release ------------------------------------------------------------
+    def _decref(self, page: int) -> None:
+        rc = self._refcount[page] - 1
+        if rc > 0:
+            self._refcount[page] = rc
+            return
+        del self._refcount[page]
+        if page in self._page_hash:
+            self._lru[page] = None            # park: reusable via its hash
+            self._lru.move_to_end(page)
+        else:
+            self._free.append(page)
+
     def free(self, req_id: int) -> None:
-        pages = self._owned.pop(req_id, [])
-        self._free.extend(pages)
+        """Drop every reference ``req_id`` holds.  Shared pages survive for
+        their other holders; cached pages park in the LRU."""
+        for p in self._owned.pop(req_id, []):
+            self._decref(p)
 
     def check_invariant(self) -> bool:
-        owned = sum(len(v) for v in self._owned.values())
-        in_free = len(self._free)
-        no_dupes = len(set(self._free)) == in_free
-        disjoint = not (set(self._free)
-                        & {p for v in self._owned.values() for p in v})
-        return owned + in_free == self.num_pages and no_dupes and disjoint
+        ref_pages = set(self._refcount)
+        free_set = set(self._free)
+        lru_set = set(self._lru)
+        # free / cached / referenced partition the pool
+        ok = (len(self._free) == len(free_set)
+              and not (free_set & lru_set)
+              and not (free_set & ref_pages)
+              and not (lru_set & ref_pages)
+              and len(free_set) + len(lru_set) + len(ref_pages)
+              == self.num_pages)
+        # refcount conservation: refcount == ownership multiplicity >= 1
+        mult: Dict[int, int] = {}
+        for pages in self._owned.values():
+            for p in pages:
+                mult[p] = mult.get(p, 0) + 1
+        ok = ok and mult == self._refcount
+        # hash index is a bijection; hashed pages are never on the free list
+        ok = ok and len(self._hash_to_page) == len(self._page_hash)
+        ok = ok and all(self._hash_to_page.get(h) == p
+                        for p, h in self._page_hash.items())
+        ok = ok and not (set(self._page_hash) & free_set)
+        # every refcount-0 cached page is re-acquirable by hash
+        ok = ok and lru_set <= set(self._page_hash)
+        return ok
 
 
 @dataclass

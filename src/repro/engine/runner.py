@@ -131,6 +131,20 @@ class PagedRunner:
             jnp.asarray(valid_len, jnp.int32))
         return logits, hidden
 
+    # ---- prefix cache: copy-on-write page copies -------------------------
+    def copy_pages(self, src_pages, dst_pages) -> None:
+        """Copy whole KV pages across all layers (copy-on-write: a request
+        extending a shared cached page gets a private copy first)."""
+        src = jnp.asarray(np.asarray(src_pages, np.int32))
+        dst = jnp.asarray(np.asarray(dst_pages, np.int32))
+        self.k_pages = self.k_pages.at[:, dst].set(self.k_pages[:, src])
+        self.v_pages = self.v_pages.at[:, dst].set(self.v_pages[:, src])
+        if self.quant:
+            self.k_scales = self.k_scales.at[:, dst].set(
+                self.k_scales[:, src])
+            self.v_scales = self.v_scales.at[:, dst].set(
+                self.v_scales[:, src])
+
     # ---- PD disaggregation: KV extraction / injection -------------------
     def extract_kv(self, block_table, n_tokens: int):
         """Pull one request's prompt KV out of the page pool.
@@ -281,8 +295,16 @@ class StateRunner:
 
     def _decode_impl(self, params, cache, embeds, positions, active):
         cfg = self.cfg
-        logits, cache = _decode_from_embeds(cfg, params, cache, embeds,
-                                            positions)
+        logits, new_cache = _decode_from_embeds(cfg, params, cache, embeds,
+                                                positions)
+        # inactive slots must be a no-op: without the mask they run the
+        # step anyway and write stale-position state/KV into the shared
+        # cache (every leaf is (outer, batch, ...), batch at dim 1)
+        def _sel(new, old):
+            mask = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(mask, new, old)
+
+        cache = jax.tree.map(_sel, new_cache, cache)
         return logits[:, 0], cache
 
     def decode(self, embeds, block_tables, positions, active):

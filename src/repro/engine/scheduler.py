@@ -3,22 +3,27 @@
 Sarathi-style: every engine step has a token budget shared between decode
 tokens (one per running decode sequence) and prefill chunks; new requests
 are admitted whenever a batch slot and enough KV pages are available.
-Invariants (property-tested in tests/test_scheduler.py):
+Invariants (property-tested in tests/test_scheduler.py and
+tests/test_kv_prefix_cache.py):
   - a slot is owned by at most one request;
-  - page accounting conserves the pool;
-  - FIFO admission (no starvation): waiting requests admit in arrival order;
+  - page accounting conserves the pool (refcount-aware with prefix cache);
+  - FIFO admission (no starvation): waiting requests admit in arrival order
+    and a cache hit never lets a later request jump the queue;
   - per-step scheduled tokens <= token_budget (unless a single decode set
-    already exceeds it — decodes are never dropped).
+    already exceeds it — decodes are never dropped);
+  - a request never writes KV into a page another request can read: shared
+    cached pages sit strictly before a sequence's write position, and a
+    fully-cached final prompt page is replaced by a copy-on-write copy.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.engine.kv_cache import (BlockTableStore, PageAllocator,
+from repro.engine.kv_cache import (BlockHash, BlockTableStore, PageAllocator,
                                    PagedKVConfig, pages_for)
 from repro.engine.sampling import SamplingParams
 
@@ -34,6 +39,8 @@ class SeqState:
     pos: int = 0                       # next position to write
     finished: bool = False
     resumed: bool = False              # re-prefilling after preemption
+    block_hashes: List[BlockHash] = field(default_factory=list)
+    cached_tokens: int = 0             # prompt tokens served from the cache
 
     @property
     def in_prefill(self) -> bool:
@@ -53,6 +60,9 @@ class StepPlan:
     decode_req_ids: List[int] = field(default_factory=list)
     admitted: List[int] = field(default_factory=list)
     preempted: List[int] = field(default_factory=list)
+    # (src, dst) device page copies the engine must apply before prefill:
+    # dst is a private copy of shared cached page src (copy-on-write)
+    cow_pairs: List[Tuple[int, int]] = field(default_factory=list)
 
     @property
     def total_tokens(self) -> int:
@@ -63,23 +73,36 @@ class StepPlan:
 class Scheduler:
     def __init__(self, kv: PagedKVConfig, max_batch: int,
                  token_budget: int = 256, chunk_size: int = 64,
-                 enable_preemption: bool = False):
+                 enable_preemption: bool = False,
+                 enable_prefix_cache: bool = False):
         self.kv = kv
         self.max_batch = max_batch
         self.token_budget = token_budget
         self.chunk_size = chunk_size
         self.enable_preemption = enable_preemption
-        self.allocator = PageAllocator(kv.num_pages)
+        self.enable_prefix_cache = enable_prefix_cache
+        self.allocator = PageAllocator(
+            kv.num_pages, enable_prefix_cache=enable_prefix_cache)
         self.tables = BlockTableStore(kv)
         self.waiting: Deque[SeqState] = deque()
         self.running: Dict[int, SeqState] = {}
         self._free_slots = list(range(max_batch - 1, -1, -1))
         self.preemptions = 0
+        # per-stage prefix-cache hit accounting (surfaced by the engine)
+        self.prefix_stats = {"lookups": 0, "hits": 0,
+                             "cached_tokens": 0, "computed_tokens": 0}
 
     # ------------------------------------------------------------------
-    def add(self, req_id: int, prompt_len: int,
-            sampling: SamplingParams) -> None:
-        self.waiting.append(SeqState(req_id, prompt_len, sampling))
+    def add(self, req_id: int, prompt_len: int, sampling: SamplingParams,
+            block_hashes: Optional[List[BlockHash]] = None) -> None:
+        self.waiting.append(SeqState(req_id, prompt_len, sampling,
+                                     block_hashes=block_hashes or []))
+
+    def set_hashes(self, req_id: int, hashes: List[BlockHash]) -> None:
+        """Replace a running request's block-hash chain (the engine extends
+        it over generated tokens just before release, so whole finished
+        contexts become matchable by later multi-turn requests)."""
+        self.running[req_id].block_hashes = hashes
 
     def add_prefilled(self, req_id: int, prompt_len: int,
                       sampling: SamplingParams) -> None:
@@ -102,17 +125,65 @@ class Scheduler:
         return min(pages_for(tokens, self.kv.page_size),
                    self.kv.max_pages_per_seq)
 
+    def _match_prefix(self, seq: SeqState, total: int):
+        """Longest cached prefix usable by ``seq``: (pages, cow_src).
+
+        Only full pages strictly before the last prompt token are reused
+        as-is (at least one token must be computed to produce logits).  If
+        the whole page-aligned prompt is cached, the final page is still
+        reused — via a copy-on-write private copy into which only the last
+        prompt token is recomputed."""
+        page = self.kv.page_size
+        matched = self.allocator.lookup(seq.block_hashes)
+        k_full = min((seq.prompt_len - 1) // page, total - 1)
+        cow_src = None
+        if (len(matched) > k_full and (k_full + 1) * page == seq.prompt_len
+                and k_full == (seq.prompt_len - 1) // page):
+            cow_src = matched[k_full]
+        return matched[:k_full], cow_src
+
+    def _admit_one(self, seq: SeqState, plan: StepPlan) -> bool:
+        page = self.kv.page_size
+        total = self._admission_pages(seq)
+        cached: List[int] = []
+        cow_src = None
+        looked_up = (self.enable_prefix_cache and seq.block_hashes
+                     and seq.prefill_done == 0)
+        if looked_up:
+            cached, cow_src = self._match_prefix(seq, total)
+            self.prefix_stats["lookups"] += 1
+        # take refs on the hit pages (and pin the CoW source so it cannot
+        # be evicted before the engine copies it) BEFORE allocating fresh
+        # pages: allocation may evict refcount-0 cached pages
+        pins = cached + ([cow_src] if cow_src is not None else [])
+        self.allocator.acquire(seq.req_id, pins)
+        fresh = self.allocator.allocate(seq.req_id, total - len(cached))
+        if fresh is None:
+            self.allocator.free(seq.req_id)    # roll back the acquisitions
+            return False                       # FIFO: head waits, no skips
+        if cow_src is not None:
+            plan.cow_pairs.append((cow_src, fresh[0]))
+            seq.cached_tokens = (len(cached) + 1) * page - 1
+        else:
+            seq.cached_tokens = len(cached) * page
+        if seq.cached_tokens:
+            self.prefix_stats["hits"] += 1
+            seq.prefill_done = seq.cached_tokens
+            seq.pos = seq.cached_tokens
+        if looked_up:
+            self.prefix_stats["cached_tokens"] += seq.cached_tokens
+            self.prefix_stats["computed_tokens"] += (seq.prompt_len
+                                                     - seq.cached_tokens)
+        seq.slot = self._free_slots.pop()
+        self.tables.set(seq.req_id, cached + fresh)
+        self.running[seq.req_id] = seq
+        plan.admitted.append(seq.req_id)
+        return True
+
     def _try_admit(self, plan: StepPlan) -> None:
         while self.waiting and self._free_slots:
-            seq = self.waiting[0]
-            pages = self.allocator.allocate(seq.req_id,
-                                            self._admission_pages(seq))
-            if pages is None:
+            if not self._admit_one(self.waiting[0], plan):
                 break                   # FIFO: don't skip ahead of the head
-            seq.slot = self._free_slots.pop()
-            self.tables.set(seq.req_id, pages)
-            self.running[seq.req_id] = seq
-            plan.admitted.append(seq.req_id)
             self.waiting.popleft()
 
     def _preempt(self, victim: SeqState, plan: StepPlan) -> None:
@@ -144,8 +215,10 @@ class Scheduler:
             if seq.req_id not in self.running or seq.finished \
                     or seq.in_prefill:
                 continue
+            # grow against the block TABLE length: owned pages can include
+            # a CoW pin that is not addressable through the table
             while (pages_for(seq.pos + 1, self.kv.page_size)
-                   > len(self.allocator.pages_owned(seq.req_id))):
+                   > len(self.tables.tables.get(seq.req_id, []))):
                 got = self.allocator.allocate(seq.req_id, 1)
                 if got is not None:
                     self.tables.extend(seq.req_id, got)
@@ -206,6 +279,15 @@ class Scheduler:
 
     def release(self, req_id: int) -> None:
         seq = self.running.pop(req_id)
+        if self.enable_prefix_cache and seq.block_hashes:
+            # publish the finished request's full, KV-complete pages into
+            # the index; free() then parks refcount-0 hashed pages in the
+            # LRU instead of the free list, so later arrivals can hit them
+            n_full = min(len(seq.block_hashes),
+                         seq.pos // self.kv.page_size)
+            table = self.tables.tables.get(req_id, [])
+            self.allocator.publish(table[:n_full],
+                                   seq.block_hashes[:n_full])
         self.allocator.free(req_id)
         self.tables.drop(req_id)
         self._free_slots.append(seq.slot)

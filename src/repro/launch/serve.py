@@ -36,10 +36,12 @@ from repro.engine.sampling import SamplingParams
 from repro.models import transformer as T
 
 
-def build_single_arch(arch: str, max_batch: int, max_new: int, seed: int = 0):
+def build_single_arch(arch: str, max_batch: int, max_new: int, seed: int = 0,
+                      prefix_cache: bool = False):
     cfg = get_config(arch, smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(seed))
     eng = AREngine(arch, cfg, params, kv=_kv(max_batch), max_batch=max_batch,
+                   enable_prefix_cache=prefix_cache,
                    default_sampling=SamplingParams(max_new_tokens=max_new,
                                                    temperature=0.8, top_k=20))
     graph = StageGraph()
@@ -129,25 +131,37 @@ def main() -> None:
                     help="--online arrival rate (req/s)")
     ap.add_argument("--max-inflight", type=int, default=8,
                     help="--online admission control limit")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="block-level KV prefix caching on every AR stage "
+                         "(default on)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
     args = ap.parse_args()
 
     if args.pipeline == "qwen_omni":
-        graph, engines, _ = build_qwen_omni(max_batch=args.max_batch)
+        graph, engines, _ = build_qwen_omni(max_batch=args.max_batch,
+                                            prefix_cache=args.prefix_cache)
     elif args.pipeline == "qwen3_omni":
         graph, engines, _ = build_qwen_omni(max_batch=args.max_batch,
-                                            vocoder_kind="cnn")
+                                            vocoder_kind="cnn",
+                                            prefix_cache=args.prefix_cache)
     elif args.pipeline == "glm_image":
         graph, engines, _ = build_ar_dit("glm_image",
-                                         max_batch=args.max_batch)
+                                         max_batch=args.max_batch,
+                                         prefix_cache=args.prefix_cache)
     elif args.pipeline == "mimo_audio":
-        graph, engines, _ = build_mimo_audio(max_batch=args.max_batch)
+        graph, engines, _ = build_mimo_audio(max_batch=args.max_batch,
+                                             prefix_cache=args.prefix_cache)
     elif args.pipeline == "pd":
         from repro.configs.pipelines import build_pd_disaggregated
         graph, engines, _ = build_pd_disaggregated(
-            max_batch=args.max_batch, max_new=args.max_new)
+            max_batch=args.max_batch, max_new=args.max_new,
+            prefix_cache=args.prefix_cache)
     elif args.arch:
         graph, engines, _ = build_single_arch(args.arch, args.max_batch,
-                                              args.max_new, args.seed)
+                                              args.max_new, args.seed,
+                                              prefix_cache=args.prefix_cache)
     else:
         ap.error("pass --pipeline or --arch")
 
@@ -191,6 +205,15 @@ def main() -> None:
     for kind, st in orch.connector_stats().items():
         print(f"connector[{kind}]: {st.calls} transfers, {st.bytes} bytes, "
               f"{st.wall_time*1e3:.2f} ms wall")
+    for name, eng in engines.items():
+        ps = getattr(eng, "prefix_stats", None)
+        if ps and ps.get("lookups"):
+            tot = ps["cached_tokens"] + ps["computed_tokens"]
+            rate = 100.0 * ps["cached_tokens"] / tot if tot else 0.0
+            print(f"prefix-cache[{name}]: hits={ps['hits']}/"
+                  f"{ps['lookups']} cached={ps['cached_tokens']} "
+                  f"computed={ps['computed_tokens']} tokens "
+                  f"(hit-rate {rate:.1f}%)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,317 @@
+"""Refcounted prefix-cache allocator + cache-aware scheduler invariants.
+
+Pure host-side structures (no jitted model work) — this module is in the
+fast tier.  Hypothesis property tests run under the conftest shim when
+hypothesis is installed; the deterministic random-walk versions always
+run so the invariants are exercised offline too.
+"""
+import random
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.engine.kv_cache import (PageAllocator, PagedKVConfig,
+                                   hash_embed_blocks, hash_token_blocks)
+from repro.engine.sampling import SamplingParams
+from repro.engine.scheduler import Scheduler
+
+PAGE = 8
+
+
+def _hashes(tokens):
+    return hash_token_blocks(tokens, PAGE)
+
+
+# ---------------------------------------------------------------------------
+# allocator unit tests
+# ---------------------------------------------------------------------------
+
+def test_acquire_publish_release_cycle():
+    a = PageAllocator(8, enable_prefix_cache=True)
+    h = _hashes(list(range(16)))               # 2 full pages
+    p1 = a.allocate(1, 3)
+    a.publish(p1[:2], h)
+    assert a.lookup(h) == p1[:2]
+    a.free(1)
+    # published pages park in the LRU; the unhashed one is free
+    assert a.cached_pages == 2 and a.free_pages == 6
+    assert a.check_invariant()
+    # a second request re-acquires them (refcount 0 -> 1)
+    a.acquire(2, a.lookup(h))
+    assert a.refcount(p1[0]) == 1 and a.cached_pages == 0
+    # a third shares them (refcount 2)
+    a.acquire(3, a.lookup(h))
+    assert a.refcount(p1[0]) == 2
+    a.free(2)
+    assert a.refcount(p1[0]) == 1 and a.check_invariant()
+    a.free(3)
+    assert a.cached_pages == 2 and a.reusable_pages == 8
+    assert a.check_invariant()
+
+
+def test_lru_eviction_frees_cached_pages_only():
+    a = PageAllocator(4, enable_prefix_cache=True)
+    h = _hashes(list(range(24)))               # 3 pages
+    pages = a.allocate(1, 3)
+    a.publish(pages, h)
+    a.free(1)
+    assert a.cached_pages == 3
+    # allocating past the free list evicts oldest cached pages
+    got = a.allocate(2, 3)
+    assert got is not None and a.check_invariant()
+    assert a.cached_pages <= 1 and a.evictions >= 2
+    # referenced pages are never evictable: pool is now 3 referenced +
+    # at most 1 cached — asking for 2 more must fail, not evict
+    assert a.allocate(3, 2) is None
+    assert a.check_invariant()
+
+
+def test_eviction_preserves_acquired_prefix():
+    a = PageAllocator(4, enable_prefix_cache=True)
+    h = _hashes(list(range(16)))
+    pages = a.allocate(1, 2)
+    a.publish(pages, h)
+    a.free(1)
+    a.acquire(2, a.lookup(h))           # re-acquired: refcount 1
+    a.allocate(3, 2)                    # exhausts the free list
+    assert a.allocate(4, 1) is None     # nothing evictable remains
+    assert a.lookup(h) == pages         # the acquired prefix survived
+    assert a.check_invariant()
+
+
+def test_cow_gives_private_copy_and_pins_source():
+    a = PageAllocator(6, enable_prefix_cache=True)
+    h = _hashes(list(range(8)))
+    pages = a.allocate(1, 1)
+    a.publish(pages, h)
+    a.free(1)
+    src = a.lookup(h)[0]
+    a.acquire(2, [src])
+    dst = a.cow(2, src)
+    assert dst is not None and dst != src
+    assert a.refcount(src) == 1 and a.refcount(dst) == 1
+    assert a.check_invariant()
+    # the source stays cached after the holder releases
+    a.free(2)
+    assert a.lookup(h) == [src] and a.cached_pages == 1
+    assert a.check_invariant()
+
+
+def test_publish_dedupes_first_writer_wins():
+    a = PageAllocator(8, enable_prefix_cache=True)
+    h = _hashes(list(range(8)))
+    p1 = a.allocate(1, 1)
+    p2 = a.allocate(2, 1)
+    a.publish(p1, h)
+    a.publish(p2, h)                    # duplicate content: ignored
+    assert a.lookup(h) == p1
+    a.free(1)
+    a.free(2)
+    # the duplicate went straight back to the free list
+    assert a.cached_pages == 1 and a.free_pages == 7
+    assert a.check_invariant()
+
+
+def test_disabled_cache_matches_legacy_allocator():
+    a = PageAllocator(10)
+    p1 = a.allocate(1, 4)
+    p2 = a.allocate(2, 6)
+    assert p1 and p2 and a.free_pages == 0
+    assert a.allocate(3, 1) is None
+    a.publish(p1, _hashes(list(range(32))))    # no-op when disabled
+    a.free(1)
+    assert a.free_pages == 4 and a.cached_pages == 0
+    assert a.check_invariant()
+
+
+def test_hash_chains_are_prefix_consistent():
+    toks = list(range(40))
+    full = _hashes(toks)
+    assert _hashes(toks[:16]) == full[:2]      # chain property
+    assert _hashes([1] + toks[1:])[0] != full[0]
+    assert len(full) == 40 // PAGE
+    import numpy as np
+    e = np.arange(32 * 4, dtype=np.float32).reshape(32, 4)
+    he = hash_embed_blocks(e, PAGE)
+    assert len(he) == 4 and he == hash_embed_blocks(e.copy(), PAGE)
+    # token and embed hashes can never collide (kind-tagged)
+    assert all(a != b for a in full for b in he)
+
+
+# ---------------------------------------------------------------------------
+# random-walk property: conservation, no double free, no eviction of
+# referenced pages under arbitrary acquire/share/release/evict/CoW mixes
+# ---------------------------------------------------------------------------
+
+def _allocator_walk(seed: int, num_pages: int, steps: int) -> None:
+    r = random.Random(seed)
+    a = PageAllocator(num_pages, enable_prefix_cache=True)
+    live = {}                                  # req_id -> published hashes
+    next_req = 0
+    for _ in range(steps):
+        op = r.random()
+        if op < 0.35 or not live:              # new request: hit + allocate
+            rid = next_req
+            next_req += 1
+            toks = [r.randrange(3) for _ in range(r.randrange(0, 4 * PAGE))]
+            hashes = _hashes(toks)
+            hit = a.lookup(hashes)
+            a.acquire(rid, hit)
+            want = r.randrange(1, 4)
+            got = a.allocate(rid, want)
+            if got is None:
+                a.free(rid)                    # admission rollback
+                continue
+            if hit and r.random() < 0.5:       # CoW the last shared page
+                a.cow(rid, hit[-1])
+            # publish the fresh pages under the next chain hashes
+            n_pub = min(len(got), max(0, len(hashes) - len(hit)))
+            a.publish(got[:n_pub], hashes[len(hit):len(hit) + n_pub])
+            live[rid] = True
+        elif op < 0.8:                         # release a random request
+            rid = r.choice(list(live))
+            del live[rid]
+            a.free(rid)
+        else:                                  # churn: force evictions
+            filler = -1
+            got = a.allocate(filler, r.randrange(1, num_pages))
+            if got is not None:
+                a.free(filler)
+        assert a.check_invariant(), f"invariant broken (seed={seed})"
+    for rid in list(live):
+        a.free(rid)
+    assert a.check_invariant()
+    assert a.reusable_pages == num_pages       # pool fully conserved
+
+
+def test_allocator_random_walk_deterministic():
+    for seed in range(25):
+        _allocator_walk(seed, num_pages=12, steps=120)
+
+
+@given(st.integers(0, 10_000), st.integers(6, 24), st.integers(20, 200))
+@settings(max_examples=50, deadline=None)
+def test_allocator_random_walk(seed, num_pages, steps):
+    _allocator_walk(seed, num_pages, steps)
+
+
+# ---------------------------------------------------------------------------
+# cache-aware scheduler: shared prompts hit, FIFO holds, pool conserved
+# ---------------------------------------------------------------------------
+
+def _drive(sched, prompts_hashes, max_new=3):
+    admitted = []
+    for i, (plen, hashes) in enumerate(prompts_hashes):
+        sched.add(i, plen, SamplingParams(max_new_tokens=max_new),
+                  block_hashes=hashes)
+    for _ in range(5000):
+        if not sched.has_work:
+            break
+        plan = sched.schedule()
+        assert sched.allocator.check_invariant()
+        admitted.extend(plan.admitted)
+        if not plan.prefill_chunks and not plan.decode_req_ids:
+            break
+        for ch in plan.prefill_chunks:
+            sched.note_prefill(ch.req_id, ch.length)
+            if not sched.running[ch.req_id].in_prefill:
+                if sched.note_sampled(ch.req_id, 0):
+                    sched.release(ch.req_id)
+        for rid in list(plan.decode_req_ids):
+            if rid in sched.running and not sched.running[rid].finished:
+                sched.note_decode_written(rid)
+                if sched.note_sampled(rid, 1):
+                    sched.release(rid)
+    return admitted
+
+
+def _scheduler_walk(seed: int, n_reqs: int) -> None:
+    r = random.Random(seed)
+    kv = PagedKVConfig(num_pages=48, page_size=PAGE, max_pages_per_seq=8)
+    sched = Scheduler(kv, max_batch=4, token_budget=32, chunk_size=PAGE,
+                      enable_prefix_cache=True)
+    families = [[r.randrange(100) for _ in range(3 * PAGE)]
+                for _ in range(2)]
+    prompts = []
+    for _ in range(n_reqs):
+        fam = r.choice(families)
+        cut = r.randrange(1, len(fam) + 1)
+        toks = fam[:cut] + [r.randrange(100, 200)
+                            for _ in range(r.randrange(0, PAGE))]
+        prompts.append((len(toks), _hashes(toks)))
+    admitted = _drive(sched, prompts)
+    assert admitted == sorted(admitted), "cache hits must not break FIFO"
+    assert not sched.running and not sched.waiting
+    # drained: every page free or parked (cached) — nothing leaked
+    assert sched.allocator.reusable_pages == kv.num_pages
+    assert sched.allocator.check_invariant()
+
+
+def test_scheduler_prefix_walk_deterministic():
+    for seed in range(20):
+        _scheduler_walk(seed, n_reqs=12)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 16))
+@settings(max_examples=30, deadline=None)
+def test_scheduler_prefix_walk(seed, n_reqs):
+    _scheduler_walk(seed, n_reqs)
+
+
+def test_scheduler_shared_prompt_hits_and_cow():
+    kv = PagedKVConfig(num_pages=32, page_size=PAGE, max_pages_per_seq=8)
+    sched = Scheduler(kv, max_batch=2, token_budget=64, chunk_size=PAGE,
+                      enable_prefix_cache=True)
+    toks = list(range(2 * PAGE))               # exactly page-aligned
+    _drive(sched, [(len(toks), _hashes(toks))])
+    st0 = dict(sched.prefix_stats)
+    assert st0["hits"] == 0 and st0["computed_tokens"] == 2 * PAGE
+    # identical page-aligned prompt: full hit via CoW, one token recomputed
+    sched.add(1, len(toks), SamplingParams(max_new_tokens=3),
+              block_hashes=_hashes(toks))
+    plan = sched.schedule()
+    assert plan.admitted == [1] and len(plan.cow_pairs) == 1
+    seq = sched.running[1]
+    assert seq.cached_tokens == 2 * PAGE - 1
+    assert seq.prefill_done == seq.pos == 2 * PAGE - 1
+    # the CoW copy is private; the shared source is not in the table
+    src, dst = plan.cow_pairs[0]
+    table = sched.tables.tables[1]
+    assert dst in table and src not in table
+    assert sched.allocator.refcount(src) == 1   # pinned until release
+    assert sched.allocator.check_invariant()
+    # only the suffix (1 token here) is left to prefill
+    assert sum(c.length for c in plan.prefill_chunks) == 1
+    sched.note_prefill(1, 1)
+    assert not sched.running[1].in_prefill
+    sched.note_sampled(1, 0)
+    sched.release(1)
+    assert sched.allocator.reusable_pages == kv.num_pages
+    assert sched.allocator.check_invariant()
+
+
+def test_scheduler_partial_prefix_hit():
+    kv = PagedKVConfig(num_pages=32, page_size=PAGE, max_pages_per_seq=8)
+    sched = Scheduler(kv, max_batch=2, token_budget=64, chunk_size=PAGE,
+                      enable_prefix_cache=True)
+    shared = list(range(2 * PAGE))
+    _drive(sched, [(2 * PAGE + 3, _hashes(shared + [7, 8, 9]))])
+    # same 2-page prefix, different tail
+    sched.add(1, 2 * PAGE + 5, SamplingParams(max_new_tokens=2),
+              block_hashes=_hashes(shared + [1, 2, 3, 4, 5]))
+    plan = sched.schedule()
+    assert plan.admitted == [1] and not plan.cow_pairs
+    assert sched.running[1].cached_tokens == 2 * PAGE
+    assert sched.prefix_stats["hits"] == 1
+    assert sched.allocator.check_invariant()
+
+
+def test_prefix_cache_off_never_caches():
+    kv = PagedKVConfig(num_pages=32, page_size=PAGE, max_pages_per_seq=8)
+    sched = Scheduler(kv, max_batch=2, token_budget=64, chunk_size=PAGE)
+    toks = list(range(2 * PAGE))
+    _drive(sched, [(len(toks), _hashes(toks)),
+                   (len(toks), _hashes(toks))])
+    assert sched.prefix_stats["lookups"] == 0
+    assert sched.allocator.free_pages == kv.num_pages
+    assert sched.allocator.cached_pages == 0

@@ -115,3 +115,40 @@ def test_pd_stages_run_disjoint_workloads(pd):
     assert engines["decode"].steps >= 7        # ~7 decode iterations
     sched = engines["decode"].scheduler
     assert not sched.running and not sched.waiting
+
+
+def test_int8_kv_extract_inject_roundtrip():
+    """PD transfer with int8 page pools: the prefill engine dequantizes to
+    float for the wire, the decode engine re-quantizes on injection.  A
+    decode step against the injected pages must match one against the
+    locally-prefilled pages (re-quantizing already-quantized values is a
+    near-fixed-point, so logits agree to int8 tolerance)."""
+    from repro.engine.kv_cache import PagedKVConfig
+    from repro.engine.runner import PagedRunner
+
+    cfg = tiny_lm("t8", vocab=256).replace(kv_cache_dtype="int8")
+    params = T.init_params(cfg, jax.random.PRNGKey(7))
+    kv = PagedKVConfig(num_pages=16, page_size=8, max_pages_per_seq=8)
+    r1, r2 = PagedRunner(cfg, params, kv), PagedRunner(cfg, params, kv)
+    assert r1.k_pages.dtype == np.int8 and r1.k_scales is not None
+
+    n = 24                                     # 3 full pages
+    prompt = np.arange(1, n + 1, dtype=np.int32) % 256
+    bt1 = np.array([0, 1, 2, 3, 0, 0, 0, 0], np.int32)
+    bt2 = np.array([9, 10, 11, 12, 0, 0, 0, 0], np.int32)   # distinct pages
+    embeds = r1.embed(prompt)[None].astype(np.float32)
+    logits, _ = r1.prefill_chunk(embeds, bt1, 0, n)
+    t0 = int(np.argmax(np.asarray(logits)[n - 1]))
+
+    k, v = r1.extract_kv(bt1, n)
+    assert k.dtype == np.float32 and k.shape[1] == n
+    r2.inject_kv(k, v, bt2, n)
+
+    dec = r1.embed(np.array([t0], np.int32))[None].astype(np.float32)
+    pos = np.array([n], np.int32)
+    act = np.array([True])
+    l1, _ = r1.decode(dec, bt1[None], pos, act)
+    l2, _ = r2.decode(dec, bt2[None], pos, act)
+    l1, l2 = np.asarray(l1)[0], np.asarray(l2)[0]
+    assert int(np.argmax(l1)) == int(np.argmax(l2))
+    np.testing.assert_allclose(l1, l2, rtol=0, atol=5e-3)

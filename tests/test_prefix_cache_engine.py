@@ -1,0 +1,171 @@
+"""Engine-level prefix caching: reused KV pages must be invisible in the
+outputs.  Cached pages hold exactly the K/V a fresh prefill would compute
+(causal attention + identical chunk boundaries), so greedy generations are
+byte-identical with the cache on and off — on token stages, embed-fed
+stages (Thinker -> Talker), and across multi-turn context reuse.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.configs.pipelines import tiny_lm
+from repro.engine.ar_engine import AREngine
+from repro.engine.kv_cache import PagedKVConfig
+from repro.engine.sampling import SamplingParams
+from repro.models import transformer as T
+
+
+def _engine(cfg, params, **kw):
+    kv = PagedKVConfig(num_pages=64, page_size=8, max_pages_per_seq=16)
+    defaults = dict(kv=kv, max_batch=4, token_budget=64, chunk_size=16)
+    defaults.update(kw)
+    return AREngine("eng", cfg, params, **defaults)
+
+
+def _run_sequential(eng, inputs_list):
+    """One request at a time (each publishes before the next admits)."""
+    results = {}
+    for i, inp in enumerate(inputs_list):
+        eng.enqueue(i, inp, SamplingParams(), {})
+        for _ in range(500):
+            for ev in eng.step():
+                if ev.kind == "finished":
+                    results[ev.req_id] = list(ev.payload["tokens"])
+            assert eng.scheduler.allocator.check_invariant()
+            if not eng.has_work:
+                break
+    return results
+
+
+def _greedy_reference(cfg, params, prompt, n_new, max_seq=256):
+    toks = jnp.asarray(prompt)[None]
+    logits, cache = T.forward_prefill(cfg, params, toks, max_seq,
+                                      remat=False)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        t = jnp.array([[out[-1]]], jnp.int32)
+        logits, cache = T.forward_decode(cfg, params, cache, t,
+                                         jnp.array([pos]))
+        out.append(int(jnp.argmax(logits[0, 0])))
+        pos += 1
+    return out
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = tiny_lm("t", vocab=256)
+    params = T.init_params(cfg, jax.random.PRNGKey(3))
+    return cfg, params
+
+
+def _engines_on_off(cfg, params, n_new):
+    sp = SamplingParams(max_new_tokens=n_new, temperature=0.0)
+    return (_engine(cfg, params, enable_prefix_cache=True,
+                    default_sampling=sp),
+            _engine(cfg, params, enable_prefix_cache=False,
+                    default_sampling=sp))
+
+
+def test_token_stage_cached_suffix_matches_full_prefill(lm):
+    cfg, params = lm
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 256, 20).astype(np.int32)
+    prompts = [np.concatenate([shared, rng.integers(0, 256, n)
+                               .astype(np.int32)]) for n in (5, 9, 1)]
+    on, off = _engines_on_off(cfg, params, n_new=6)
+    got_on = _run_sequential(on, [{"tokens": p} for p in prompts])
+    got_off = _run_sequential(off, [{"tokens": p} for p in prompts])
+    assert got_on == got_off
+    for i, p in enumerate(prompts):
+        assert got_on[i] == _greedy_reference(cfg, params, p, 6)
+    st = on.prefix_stats
+    # requests 2 and 3 hit the 2 full shared pages (16 of 20 tokens)
+    assert st["hits"] == 2 and st["cached_tokens"] == 32
+    assert off.prefix_stats["lookups"] == 0
+    assert off.prefix_stats["hits"] == 0
+
+
+def test_fully_cached_prompt_uses_cow(lm):
+    cfg, params = lm
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, 256, 24).astype(np.int32)   # page-aligned
+    on, off = _engines_on_off(cfg, params, n_new=5)
+    got_on = _run_sequential(on, [{"tokens": prompt}] * 2)
+    got_off = _run_sequential(off, [{"tokens": prompt}] * 2)
+    assert got_on == got_off == {0: got_off[0], 1: got_off[0]}
+    # an identical page-aligned prompt reuses all but the last token via a
+    # private copy-on-write page (a full hit would skip the logits)
+    assert on.prefix_stats["cached_tokens"] == 23
+    assert on.prefix_stats["computed_tokens"] == 24 + 1
+
+
+def test_embed_fed_stage_prefix_hits(lm):
+    """Stages fed hidden states (no token ids) hash prompt-embed bytes."""
+    cfg, params = lm
+    emb = np.asarray(params["embed"], np.float32)
+    shared = emb[np.arange(16)]
+    p1 = np.concatenate([shared, emb[np.arange(20, 23)]])
+    p2 = np.concatenate([shared, emb[np.arange(40, 45)]])
+    on, off = _engines_on_off(cfg, params, n_new=4)
+    got_on = _run_sequential(on, [{"prompt_embeds": p1},
+                                  {"prompt_embeds": p2}])
+    got_off = _run_sequential(off, [{"prompt_embeds": p1},
+                                    {"prompt_embeds": p2}])
+    assert got_on == got_off
+    st = on.prefix_stats
+    assert st["hits"] == 1 and st["cached_tokens"] == 16
+
+
+def test_multi_turn_context_reuse(lm):
+    """A follow-up whose prompt extends turn 1's full context (prompt +
+    generated tokens) hits pages published at release, past the original
+    prompt boundary — the block-hash chain is extended over generations."""
+    cfg, params = lm
+    rng = np.random.default_rng(2)
+    p1 = rng.integers(0, 256, 16).astype(np.int32)
+    n_new = 8
+    on, off = _engines_on_off(cfg, params, n_new=n_new)
+    g1 = _run_sequential(on, [{"tokens": p1}])[0]
+    # turn 2: full turn-1 context + a new user turn
+    p2 = np.concatenate([p1, np.asarray(g1, np.int32),
+                         rng.integers(0, 256, 5).astype(np.int32)])
+    got_on = _run_sequential(on, [{"tokens": p2}])
+    _run_sequential(off, [{"tokens": p1}])
+    got_off = _run_sequential(off, [{"tokens": p2}])
+    assert got_on == got_off
+    # turn-1 KV-complete pages: prompt 16 + 7 written generated tokens
+    # -> 2 full pages (16 tokens) of the 24-token turn-2 prefix
+    st = on.prefix_stats
+    assert st["hits"] >= 1 and st["cached_tokens"] >= 16
+
+
+def test_ssm_engine_rejects_prefix_cache_and_masks_inactive_slots():
+    """Recurrent-state stages have no pages to share: the engine must turn
+    the flag off.  And a decode step must not advance the state of slots
+    that are not decoding (a request prefilled in the same step would have
+    its fresh state corrupted by the padding row)."""
+    cfg = get_config("falcon_mamba_7b", smoke=True).replace(dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(4))
+    sp = SamplingParams(max_new_tokens=8, temperature=0.0)
+    eng = _engine(cfg, params, enable_prefix_cache=True,
+                  default_sampling=sp)
+    assert not eng.enable_prefix_cache
+    pa = np.arange(8, dtype=np.int32)
+    pb = np.arange(3, 12, dtype=np.int32)
+    # stagger: A decodes while B prefills/joins mid-flight
+    eng.enqueue(0, {"tokens": pa}, SamplingParams(), {})
+    for _ in range(3):
+        eng.step()
+    eng.enqueue(1, {"tokens": pb}, SamplingParams(), {})
+    results = {}
+    for _ in range(200):
+        for ev in eng.step():
+            if ev.kind == "finished":
+                results[ev.req_id] = list(ev.payload["tokens"])
+        if not eng.has_work:
+            break
+    assert results[0] == _greedy_reference(cfg, params, pa, 8)
+    assert results[1] == _greedy_reference(cfg, params, pb, 8)
