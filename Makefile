@@ -1,6 +1,7 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast check serve-online bench-online bench-smoke
+.PHONY: test test-fast check serve-online bench-online bench-smoke \
+    bench-compare
 
 # default pre-commit check: sub-minute smoke subset
 check: test-fast
@@ -21,8 +22,17 @@ serve-online:
 bench-online:
 	$(PY) -m benchmarks.bench_online
 
-# sub-minute benchmark smoke: online serving + prefix caching, JSON out
+# sub-minute benchmark smoke: online serving + prefix caching + replica
+# scaling, JSON out, then a cross-run trend table over the dumps
 bench-smoke:
 	$(PY) -m benchmarks.bench_prefix_cache --smoke \
 	    --json BENCH_prefix_cache.json
 	$(PY) -m benchmarks.bench_online --smoke --json BENCH_online.json
+	$(PY) -m benchmarks.bench_replicas --smoke --json BENCH_replicas.json
+	$(PY) -m benchmarks.compare BENCH_prefix_cache.json \
+	    BENCH_online.json BENCH_replicas.json || true
+
+# diff two or more BENCH_*.json dumps (regression table / trend):
+#   make bench-compare FILES="old.json new.json"
+bench-compare:
+	$(PY) -m benchmarks.compare $(FILES)

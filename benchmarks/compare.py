@@ -1,0 +1,102 @@
+"""Diff benchmark JSON files across runs (regression tracking).
+
+Each input is a ``--json`` dump from benchmarks/run.py or any single
+bench module: a list of ``{name, us_per_call, derived}`` records.  With
+two files the output is a baseline-vs-candidate regression table; with
+three or more, a trend table (one column per file, oldest first), so the
+bench-smoke tier can track a metric's trajectory across PRs.
+
+Lower is better for every row (``us_per_call`` is a latency-like
+number); rows whose name ends in ``_rate`` / ``_per_s`` / ``equality``
+are higher-is-better and the regression sign flips accordingly.
+
+  PYTHONPATH=src python -m benchmarks.compare BENCH_a.json BENCH_b.json \
+      [BENCH_c.json ...] [--threshold 10] [--fail-on-regression]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+HIGHER_IS_BETTER = ("_rate", "_per_s", "equality", "speedup")
+
+
+def load(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        recs = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in recs
+            if not r["name"].endswith("_harness_wall")}
+
+
+def higher_is_better(name: str) -> bool:
+    return any(name.endswith(s) or s in name for s in HIGHER_IS_BETTER)
+
+
+def pct_change(old: float, new: float) -> float:
+    if old == 0:
+        return 0.0 if new == 0 else float("inf")
+    return 100.0 * (new - old) / old
+
+
+def regression(name: str, old: float, new: float) -> float:
+    """Signed regression percentage: positive = got worse."""
+    d = pct_change(old, new)
+    return -d if higher_is_better(name) else d
+
+
+def compare(paths: List[str], threshold: float) -> int:
+    runs = [(os.path.basename(p), load(p)) for p in paths]
+    names: List[str] = []
+    for _, rows in runs:                 # first-seen order, union
+        for n in rows:
+            if n not in names:
+                names.append(n)
+
+    w = max((len(n) for n in names), default=4) + 2
+    cols = [label[:16] for label, _ in runs]
+    print("metric".ljust(w) + "".join(c.rjust(18) for c in cols)
+          + ("   change" if len(runs) == 2 else "   trend"))
+    regressions = 0
+    for n in names:
+        vals = [rows.get(n) for _, rows in runs]
+        cells = "".join((f"{v:.1f}" if v is not None else "-").rjust(18)
+                        for v in vals)
+        present = [v for v in vals if v is not None]
+        tail = ""
+        if len(present) >= 2 and present[0] is not None:
+            reg = regression(n, present[0], present[-1])
+            arrow = "" if abs(reg) < threshold else (
+                "  << REGRESSION" if reg > 0 else "  improved")
+            sign = "+" if reg > 0 else ""
+            tail = f"   {sign}{reg:.1f}%{arrow}"
+            if reg > threshold:
+                regressions += 1
+        print(n.ljust(w) + cells + tail)
+    if regressions:
+        print(f"\n{regressions} metric(s) regressed more than "
+              f"{threshold:.0f}% vs {runs[0][0]}")
+    return regressions
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", help="2+ BENCH_*.json files, "
+                    "oldest (baseline) first")
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="regression flag threshold in percent")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 if any metric regressed past threshold")
+    args = ap.parse_args()
+    if len(args.files) < 2:
+        ap.error("need at least two files to compare")
+    n = compare(args.files, args.threshold)
+    if args.fail_on_regression and n:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

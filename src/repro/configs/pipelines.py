@@ -88,29 +88,42 @@ def build_qwen_omni(*, max_batch: int = 8, thinker_tokens: int = 24,
         data["mm_frames_used"] = mm.shape[0]
         return {"prompt_prepend": np.asarray(mm, np.float32) @ mm_proj}
 
-    thinker = AREngine(
-        "thinker", thinker_cfg, thinker_params, kv=_kv(max_batch),
-        max_batch=max_batch, collect_hidden=True, preprocess=mm_encode,
-        enable_prefix_cache=prefix_cache,
-        default_sampling=SamplingParams(max_new_tokens=thinker_tokens,
-                                        temperature=0.8, top_k=20),
-        seed=seed)
-    talker = AREngine(
-        "talker", talker_cfg, talker_params, kv=_kv(max_batch),
-        max_batch=max_batch, preprocess=talker_preprocess,
-        stream_chunk=stream_chunk, enable_prefix_cache=prefix_cache,
-        default_sampling=SamplingParams(max_new_tokens=talker_tokens,
-                                        temperature=0.8, top_k=20),
-        seed=seed + 1)
+    # engine factories: replica 0 below is the first call; scale_up /
+    # --replicas build extra replicas from the SAME initialized params
+    # (each replica gets its own scheduler, allocator and KV pool)
+    def make_thinker():
+        return AREngine(
+            "thinker", thinker_cfg, thinker_params, kv=_kv(max_batch),
+            max_batch=max_batch, collect_hidden=True, preprocess=mm_encode,
+            enable_prefix_cache=prefix_cache,
+            default_sampling=SamplingParams(max_new_tokens=thinker_tokens,
+                                            temperature=0.8, top_k=20),
+            seed=seed)
+
+    def make_talker():
+        return AREngine(
+            "talker", talker_cfg, talker_params, kv=_kv(max_batch),
+            max_batch=max_batch, preprocess=talker_preprocess,
+            stream_chunk=stream_chunk, enable_prefix_cache=prefix_cache,
+            default_sampling=SamplingParams(max_new_tokens=talker_tokens,
+                                            temperature=0.8, top_k=20),
+            seed=seed + 1)
+
+    thinker = make_thinker()
+    talker = make_talker()
 
     if vocoder_kind == "dit":
         dit_cfg = DiTConfig(name="vocoder", num_layers=2, d_model=D,
                             num_heads=4, d_ff=256, in_dim=32, cond_dim=D,
                             num_steps=dit_steps)
-        vocoder = DiffusionEngine(
-            "vocoder", dit_cfg, init_dit(dit_cfg, ks[3]),
-            max_batch=max_batch, cache_interval=cache_interval,
-            out_len_per_cond=2.0, seed=seed + 2)
+        dit_params = init_dit(dit_cfg, ks[3])
+
+        def make_vocoder():
+            return DiffusionEngine(
+                "vocoder", dit_cfg, dit_params,
+                max_batch=max_batch, cache_interval=cache_interval,
+                out_len_per_cond=2.0, seed=seed + 2)
+        vocoder = make_vocoder()
     else:  # Qwen3-Omni style lightweight CNN vocoder
         wk = jax.random.split(ks[3], 2)
         w1 = jax.random.normal(wk[0], (3, D, D)) * 0.05
@@ -138,7 +151,10 @@ def build_qwen_omni(*, max_batch: int = 8, thinker_tokens: int = 24,
                 res.append({"latent": out[i, :n],
                             "chunk_index": inp.get("chunk_index", 0)})
             return res
-        vocoder = CustomEngine("vocoder", vocode, max_batch=max_batch)
+
+        def make_vocoder():
+            return CustomEngine("vocoder", vocode, max_batch=max_batch)
+        vocoder = make_vocoder()
 
     graph = StageGraph()
     graph.add_stage(StageSpec("thinker", "ar"))
@@ -164,7 +180,10 @@ def build_qwen_omni(*, max_batch: int = 8, thinker_tokens: int = 24,
               "talker_cfg": talker_cfg, "talker_params": talker_params,
               "codec_embed": codec_embed,
               "thinker_tokens": thinker_tokens,
-              "talker_tokens": talker_tokens}
+              "talker_tokens": talker_tokens,
+              "engine_factories": {"thinker": make_thinker,
+                                   "talker": make_talker,
+                                   "vocoder": make_vocoder}}
     return graph, engines, bundle
 
 
@@ -185,16 +204,24 @@ def build_ar_dit(name: str = "glm_image", *, max_batch: int = 8,
     dit_cfg = DiTConfig(name=f"{name}_dit", num_layers=2, d_model=D,
                         num_heads=4, d_ff=256, in_dim=32, cond_dim=D,
                         num_steps=dit_steps)
-    llm = AREngine(
-        f"{name}_llm", llm_cfg, llm_params, kv=_kv(max_batch),
-        max_batch=max_batch, collect_hidden=True,
-        enable_prefix_cache=prefix_cache,
-        default_sampling=SamplingParams(max_new_tokens=ar_tokens,
-                                        temperature=0.8, top_k=20),
-        seed=seed)
-    dit = DiffusionEngine(f"{name}_dit", dit_cfg, init_dit(dit_cfg, ks[2]),
-                          max_batch=max_batch, cache_interval=cache_interval,
-                          seed=seed + 1)
+    dit_params = init_dit(dit_cfg, ks[2])
+
+    def make_llm():
+        return AREngine(
+            f"{name}_llm", llm_cfg, llm_params, kv=_kv(max_batch),
+            max_batch=max_batch, collect_hidden=True,
+            enable_prefix_cache=prefix_cache,
+            default_sampling=SamplingParams(max_new_tokens=ar_tokens,
+                                            temperature=0.8, top_k=20),
+            seed=seed)
+
+    def make_dit():
+        return DiffusionEngine(f"{name}_dit", dit_cfg, dit_params,
+                               max_batch=max_batch,
+                               cache_interval=cache_interval, seed=seed + 1)
+
+    llm = make_llm()
+    dit = make_dit()
 
     graph = StageGraph()
     graph.add_stage(StageSpec(f"{name}_llm", "ar"))
@@ -208,7 +235,9 @@ def build_ar_dit(name: str = "glm_image", *, max_batch: int = 8,
     return graph, {f"{name}_llm": llm, f"{name}_dit": dit}, {
         "llm_cfg": llm_cfg, "llm_params": llm_params, "vq_embed": vq_embed,
         "ar_tokens": ar_tokens, "image_latents": image_latents,
-        "dit_cfg": dit_cfg}
+        "dit_cfg": dit_cfg,
+        "engine_factories": {f"{name}_llm": make_llm,
+                             f"{name}_dit": make_dit}}
 
 
 # ----------------------------------------------------------------------------
@@ -336,13 +365,23 @@ def build_mimo_audio(*, max_batch: int = 8, ar_tokens: int = 48,
             res.append({"audio": emb @ w_dec})
         return res
 
-    enc = EncodeEngine("patch_enc", encode, max_batch=max_batch)
-    llm = AREngine("mimo_llm", llm_cfg, llm_params, kv=_kv(max_batch),
-                   max_batch=max_batch, enable_prefix_cache=prefix_cache,
-                   default_sampling=SamplingParams(max_new_tokens=ar_tokens,
-                                                   temperature=0.8, top_k=20),
-                   seed=seed)
-    dec = CustomEngine("patch_dec", decode, max_batch=max_batch)
+    def make_enc():
+        return EncodeEngine("patch_enc", encode, max_batch=max_batch)
+
+    def make_llm():
+        return AREngine(
+            "mimo_llm", llm_cfg, llm_params, kv=_kv(max_batch),
+            max_batch=max_batch, enable_prefix_cache=prefix_cache,
+            default_sampling=SamplingParams(max_new_tokens=ar_tokens,
+                                            temperature=0.8, top_k=20),
+            seed=seed)
+
+    def make_dec():
+        return CustomEngine("patch_dec", decode, max_batch=max_batch)
+
+    enc = make_enc()
+    llm = make_llm()
+    dec = make_dec()
 
     graph = StageGraph()
     graph.add_stage(StageSpec("patch_enc", "encode"))
@@ -352,4 +391,6 @@ def build_mimo_audio(*, max_batch: int = 8, ar_tokens: int = 48,
     graph.add_edge("mimo_llm", "patch_dec",
                    lambda d, p: {"tokens": p["tokens"]}, connector="inline")
     return graph, {"patch_enc": enc, "mimo_llm": llm, "patch_dec": dec}, {
-        "llm_cfg": llm_cfg, "patch": patch}
+        "llm_cfg": llm_cfg, "patch": patch,
+        "engine_factories": {"patch_enc": make_enc, "mimo_llm": make_llm,
+                             "patch_dec": make_dec}}

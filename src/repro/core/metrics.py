@@ -50,8 +50,20 @@ def summarize_queueing(requests: List[Request]) -> Dict[str, Dict[str, float]]:
     } for stage, ds in per_stage.items()}
 
 
+def _report_row(label: str, m: Dict[str, float], cols: List[str]) -> str:
+    cells = []
+    for c in cols:
+        v = m.get(c, 0)
+        cells.append((f"{v:.4f}" if isinstance(v, float)
+                      else str(v)).rjust(17))
+    return label.ljust(12) + "".join(cells)
+
+
 def stage_report(stage_metrics: Dict[str, Dict[str, float]]) -> str:
-    """Render Orchestrator.stage_metrics() as an aligned text table."""
+    """Render Orchestrator.stage_metrics() as an aligned text table.
+    Multi-replica stages get one aggregate row plus an indented
+    ``stage/<rid>`` sub-row per replica (retired ids keep their row —
+    their counters are still part of the aggregate)."""
     cols = ["admitted", "finished", "steps", "busy_time", "busy_frac",
             "finished_per_s", "queue_delay_p50", "queue_delay_p95",
             "max_inbox_depth"]
@@ -60,10 +72,8 @@ def stage_report(stage_metrics: Dict[str, Dict[str, float]]) -> str:
     head = "stage".ljust(12) + "".join(c.rjust(17) for c in cols)
     lines = [head]
     for stage, m in stage_metrics.items():
-        cells = []
-        for c in cols:
-            v = m.get(c, 0)
-            cells.append((f"{v:.4f}" if isinstance(v, float)
-                          else str(v)).rjust(17))
-        lines.append(stage.ljust(12) + "".join(cells))
+        lines.append(_report_row(stage, m, cols))
+        for rid, rm in sorted(m.get("replicas", {}).items()):
+            mark = "" if rm.get("live") else " (retired)"
+            lines.append(_report_row(f" {stage}/{rid}{mark}", rm, cols))
     return "\n".join(lines)

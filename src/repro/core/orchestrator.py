@@ -21,35 +21,154 @@ Two backends share all routing logic:
 ``run()`` is the compatibility path: submit-all → drain → return
 completed.  It works identically on both backends, so offline callers
 never see the threads.
+
+Multi-replica stages: every stage is served by a
+:class:`~repro.core.worker.ReplicaSet` of N independently-stepping engine
+replicas.  A pluggable routing policy picks the replica per item:
+
+  - ``round_robin``   — cycle replicas (baseline);
+  - ``least_loaded``  — lowest live load (inbox depth + engine queue
+    depth + mid-step), never a retired replica (retired replicas leave
+    the candidate set before they stop);
+  - ``affinity``      — cache-affinity: score each replica by the longest
+    block-hash prefix match against its PageAllocator index (the cheap
+    ``prefix_hint`` probe), so shared-prefix traffic lands on the replica
+    already holding the pages; falls back to least-loaded when no replica
+    holds anything (or the stage cannot prefix-cache the item).
+
+``scale_up(stage)`` / ``scale_down(stage)`` move replicas at runtime —
+the scaling controller (repro.core.scaling) drives them from WorkerMetrics
+snapshots under a global replica budget (paper §3.2, flexible resource
+allocation).
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.connector.base import Connector
 from repro.connector.mooncake import make_connector
 from repro.core.graph import StageGraph
 from repro.core.request import Request, StageEvent
-from repro.core.worker import StageInput, StageWorker, WorkerMetrics
+from repro.core.worker import ReplicaSet, StageInput, WorkerMetrics
 from repro.engine.sampling import SamplingParams
+
+
+# ----------------------------------------------------------------------------
+# routing policies (ReplicaSet.submit calls select() under the set lock;
+# keep it cheap and side-effect free beyond per-stage cursors)
+# ----------------------------------------------------------------------------
+
+class RoutingPolicy:
+    """select(stage, [(rid, worker), ...], item) -> rid.  Candidates are
+    exactly the live, routable replicas — a stopping replica is removed
+    from the list before its worker stops, so no policy can pick it."""
+
+    name = "base"
+
+    def select(self, stage: str, replicas: List[Tuple[int, Any]],
+               item: StageInput) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinPolicy(RoutingPolicy):
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._next: Dict[str, int] = {}
+
+    def select(self, stage, replicas, item):
+        i = self._next.get(stage, 0) % len(replicas)
+        self._next[stage] = i + 1
+        return replicas[i][0]
+
+
+class LeastLoadedPolicy(RoutingPolicy):
+    name = "least_loaded"
+
+    def select(self, stage, replicas, item):
+        return min(replicas, key=lambda rw: (rw[1].load(), rw[0]))[0]
+
+
+class CacheAffinityPolicy(LeastLoadedPolicy):
+    """Deterministic given fixed hints: highest prefix_hint wins, ties
+    break by load then lowest replica id; hint 0 everywhere (or no hints
+    computable) falls back to least-loaded."""
+
+    name = "affinity"
+
+    def select(self, stage, replicas, item):
+        hints = item.affinity_hints
+        if hints is None and item.inputs is not None:
+            probe = getattr(replicas[0][1].engine, "affinity_hints", None)
+            hints = probe(item.inputs) if probe is not None else None
+            item.affinity_hints = hints if hints is not None else []
+        if hints:
+            scored = []
+            for rid, w in replicas:
+                hint = getattr(w.engine, "prefix_hint", None)
+                scored.append((hint(hints) if hint is not None else 0,
+                               rid, w))
+            best = max(s for s, _, _ in scored)
+            if best > 0:
+                return min((rw for rw in scored if rw[0] == best),
+                           key=lambda rw: (rw[2].load(), rw[1]))[1]
+        return super().select(stage, replicas, item)
+
+
+ROUTING_POLICIES = {p.name: p for p in
+                    (RoundRobinPolicy, LeastLoadedPolicy,
+                     CacheAffinityPolicy)}
+
+
+def make_routing_policy(name: str) -> RoutingPolicy:
+    if name not in ROUTING_POLICIES:
+        raise ValueError(f"unknown routing policy {name!r} "
+                         f"(have {sorted(ROUTING_POLICIES)})")
+    return ROUTING_POLICIES[name]()
 
 
 class Orchestrator:
     def __init__(self, graph: StageGraph, engines: Dict[str, Any],
                  connectors: Optional[Dict[str, Connector]] = None, *,
                  backend: str = "threaded", queue_capacity: int = 64,
-                 recv_timeout: float = 60.0):
+                 recv_timeout: float = 60.0,
+                 replicas: Optional[Dict[str, int]] = None,
+                 routing: Any = "affinity",
+                 engine_factories: Optional[Dict[str, Any]] = None):
         graph.validate()
         if backend not in ("threaded", "sync"):
             raise ValueError(f"unknown backend {backend!r}")
         self.graph = graph
-        self.engines = engines
         for name in graph.stages:
             if name not in engines:
                 raise ValueError(f"no engine bound for stage {name!r}")
+        # a stage binds one engine or a list of engine replicas; the
+        # ``replicas`` spec grows a stage to N via its engine factory
+        self.engine_factories = dict(engine_factories or {})
+        self.stage_replicas: Dict[str, List[Any]] = {
+            name: (list(e) if isinstance(e, (list, tuple)) else [e])
+            for name, e in engines.items() if name in graph.stages}
+        for name, n in (replicas or {}).items():
+            if name not in self.stage_replicas:
+                raise ValueError(f"replica spec for unknown stage {name!r}")
+            while len(self.stage_replicas[name]) < n:
+                fac = self.engine_factories.get(name)
+                if fac is None:
+                    raise ValueError(
+                        f"stage {name!r}: replicas={n} needs an engine "
+                        f"factory (got {len(self.stage_replicas[name])} "
+                        f"engine(s))")
+                self.stage_replicas[name].append(fac())
+        if backend == "sync" and any(len(l) > 1
+                                     for l in self.stage_replicas.values()):
+            raise ValueError("sync (lock-step) backend is single-replica")
+        self.routing = (routing if isinstance(routing, RoutingPolicy)
+                        else make_routing_policy(routing))
         # one connector instance per backend kind (shared across edges)
         kinds = {e.connector for e in graph.edges}
         self.connectors = connectors or {k: make_connector(k) for k in kinds}
@@ -65,8 +184,11 @@ class Orchestrator:
         self._transfer_log: List[dict] = []
         self._lock = threading.RLock()
         # ---- threaded backend state ----
-        self._workers: Dict[str, StageWorker] = {}
-        self._stage_metrics = {n: WorkerMetrics() for n in graph.stages}
+        self._workers: Dict[str, ReplicaSet] = {}
+        # per-stage bank of per-replica metrics; survives worker restarts
+        # AND scale_down/scale_up cycles (replica ids are reused)
+        self._stage_metrics: Dict[str, Dict[int, WorkerMetrics]] = {
+            n: {} for n in graph.stages}
         self.edge_stats = {
             StageGraph.edge_id(e): {"transfers": 0, "backpressure_s": 0.0}
             for e in graph.edges}
@@ -76,6 +198,18 @@ class Orchestrator:
         self._router_thread: Optional[threading.Thread] = None
         self._router_stop = threading.Event()
         self._started = False
+        self._scaler = None              # attached ScalingController
+
+    @property
+    def engines(self) -> Dict[str, Any]:
+        """Replica-0 view of the stage engines (single-replica compat:
+        the sync backend, pre-start admission and tick() use it)."""
+        return {n: lst[0] for n, lst in self.stage_replicas.items()}
+
+    def _live_engines(self, name: str) -> List[Any]:
+        if self._started and name in self._workers:
+            return self._workers[name].engines
+        return self.stage_replicas[name]
 
     # ------------------------------------------------------------------
     def _sp(self, req: Request) -> SamplingParams:
@@ -105,16 +239,19 @@ class Orchestrator:
     # threaded backend lifecycle
     # ------------------------------------------------------------------
     def start(self) -> None:
-        """Spin up one worker thread per stage plus the router thread."""
+        """Spin up one replica set (N worker threads) per stage plus the
+        router thread."""
         if self.backend != "threaded":
             raise RuntimeError("start() requires backend='threaded'")
         if self._started:
             return
         self._router_stop = threading.Event()
         self._workers = {
-            name: StageWorker(name, self.engines[name], self._emit,
-                              capacity=self.queue_capacity,
-                              metrics=self._stage_metrics[name])
+            name: ReplicaSet(name, self.stage_replicas[name], self._emit,
+                             capacity=self.queue_capacity,
+                             metrics_bank=self._stage_metrics[name],
+                             policy=self.routing,
+                             engine_factory=self.engine_factories.get(name))
             for name in self.graph.stages}
         self._started = True
         for w in self._workers.values():
@@ -122,6 +259,37 @@ class Orchestrator:
         self._router_thread = threading.Thread(
             target=self._router_loop, name="stage-router", daemon=True)
         self._router_thread.start()
+
+    # ------------------------------------------------------------------
+    # dynamic scaling (called by the ScalingController's thread)
+    # ------------------------------------------------------------------
+    def replica_counts(self) -> Dict[str, int]:
+        return {n: (self._workers[n].n_replicas
+                    if self._started and n in self._workers
+                    else len(self.stage_replicas[n]))
+                for n in self.graph.stages}
+
+    def scale_up(self, stage: str, engine: Any = None) -> bool:
+        """Add one replica to ``stage`` (needs an engine or a factory)."""
+        if self._started and stage in self._workers:
+            return self._workers[stage].scale_up(engine) is not None
+        if engine is None:
+            fac = self.engine_factories.get(stage)
+            if fac is None:
+                return False
+            engine = fac()
+        self.stage_replicas[stage].append(engine)
+        return True
+
+    def scale_down(self, stage: str, drain: bool = True) -> bool:
+        """Retire the least-loaded replica of ``stage`` (never below one);
+        with drain=True its queued and admitted work completes first."""
+        if self._started and stage in self._workers:
+            return self._workers[stage].scale_down(drain=drain) is not None
+        if len(self.stage_replicas[stage]) <= 1:
+            return False
+        self.stage_replicas[stage].pop()
+        return True
 
     def _emit(self, stage: str, ev: StageEvent) -> None:
         with self._counter_lock:
@@ -157,10 +325,11 @@ class Orchestrator:
         with self._counter_lock:
             if self._unrouted:
                 return False
-        if any(w.active or not w.inbox.empty()
+        if any(w.active or not w.inbox_empty()
                for w in self._workers.values()):
             return False
-        return not any(self.engines[n].has_work for n in self.graph.stages)
+        return not any(e.has_work for n in self.graph.stages
+                       for e in self._live_engines(n))
 
     def drain(self, timeout: Optional[float] = None,
               poll: float = 0.005) -> bool:
@@ -195,6 +364,10 @@ class Orchestrator:
         cascade downstream) and then the router."""
         if not self._started:
             return
+        if self._scaler is not None:         # no scaling mid-teardown
+            self._scaler.stop()
+            self._scaler.join(timeout=30.0)
+            self._scaler = None
         for name in self.graph.topo_order():
             w = self._workers[name]
             w.stop(drain=drain)
@@ -204,6 +377,10 @@ class Orchestrator:
                     if self._unrouted == 0:
                         break
                 time.sleep(0.002)
+        # persist any runtime scaling into the engine bindings so a
+        # restart reopens with the same replica topology
+        for name, w in self._workers.items():
+            self.stage_replicas[name] = w.engines
         self._router_stop.set()
         if self._router_thread is not None:
             self._router_thread.join(timeout=30.0)
@@ -374,23 +551,81 @@ class Orchestrator:
 
     # ------------------------------------------------------------------
     def stage_busy_times(self) -> Dict[str, float]:
-        return {n: getattr(self.engines[n], "busy_time", 0.0)
+        return {n: sum(getattr(e, "busy_time", 0.0)
+                       for e in self._live_engines(n))
                 for n in self.graph.stages}
+
+    def _replica_snapshots(self, name: str) -> Dict[int, Dict[str, float]]:
+        """Per-replica metric snapshots, including retired replica ids
+        whose counters still contribute to the stage totals."""
+        if self._started and name in self._workers:
+            live = {rid: w.engine for rid, w in self._workers[name].workers()}
+        else:
+            live = dict(enumerate(self.stage_replicas[name]))
+        out = {}
+        for rid, metrics in sorted(self._stage_metrics[name].items()):
+            eng = live.get(rid)
+            snap = metrics.snapshot(
+                busy_time=getattr(eng, "busy_time", 0.0) if eng else 0.0)
+            snap["live"] = 1.0 if rid in live else 0.0
+            out[rid] = snap
+        if not out:                       # never served: synthesize rows
+            for rid, eng in live.items():
+                out[rid] = WorkerMetrics().snapshot(
+                    busy_time=getattr(eng, "busy_time", 0.0))
+                out[rid]["live"] = 1.0
+        return out
+
+    def _aggregate_stage(self, name: str) -> Dict[str, float]:
+        """Merge the per-replica snapshots into one stage row: counters
+        sum, inbox high-water maxes, busy_frac is busy over summed active
+        spans (per-replica capacity), throughput adds, and queue-delay
+        percentiles are recomputed over the merged raw samples."""
+        reps = self._replica_snapshots(name)
+        agg: Dict[str, float] = {}
+        for c in ("admitted", "filtered", "finished", "events", "steps",
+                  "errors", "busy_time", "finished_per_s"):
+            agg[c] = sum(r[c] for r in reps.values())
+        agg["max_inbox_depth"] = max(
+            (r["max_inbox_depth"] for r in reps.values()), default=0)
+        span = sum(r["active_span"] for r in reps.values())
+        agg["active_span"] = span
+        agg["busy_frac"] = agg["busy_time"] / span if span > 0 else 0.0
+        qd = np.concatenate([
+            np.asarray(m.raw_delays(), np.float64)
+            for m in self._stage_metrics[name].values()]) \
+            if self._stage_metrics[name] else np.empty(0)
+        agg["queue_delay_mean"] = float(qd.mean()) if qd.size else 0.0
+        agg["queue_delay_p50"] = (float(np.percentile(qd, 50))
+                                  if qd.size else 0.0)
+        agg["queue_delay_p95"] = (float(np.percentile(qd, 95))
+                                  if qd.size else 0.0)
+        agg["n_replicas"] = sum(1 for r in reps.values() if r["live"])
+        return agg
 
     def stage_metrics(self) -> Dict[str, Dict[str, float]]:
         """Per-stage serving metrics: queueing delay, busy fraction,
-        throughput, inbox high-water mark, prefix-cache hit rates."""
+        throughput, inbox high-water mark, prefix-cache hit rates —
+        aggregated across replicas, with the per-replica rows under
+        ``"replicas"`` when a stage runs more than one."""
         out = {}
         for n in self.graph.stages:
-            m = self._stage_metrics[n].snapshot(
-                busy_time=getattr(self.engines[n], "busy_time", 0.0))
-            ps = getattr(self.engines[n], "prefix_stats", None)
-            if ps is not None and ps.get("lookups"):
-                total = ps["cached_tokens"] + ps["computed_tokens"]
-                m["cached_tokens"] = ps["cached_tokens"]
-                m["computed_tokens"] = ps["computed_tokens"]
-                m["prefix_hit_rate"] = (ps["cached_tokens"] / total
-                                        if total else 0.0)
+            m = self._aggregate_stage(n)
+            cached = computed = lookups = hits = 0
+            for eng in self._live_engines(n):
+                ps = getattr(eng, "prefix_stats", None)
+                if ps is not None:
+                    lookups += ps.get("lookups", 0)
+                    hits += ps.get("hits", 0)
+                    cached += ps.get("cached_tokens", 0)
+                    computed += ps.get("computed_tokens", 0)
+            if lookups:
+                total = cached + computed
+                m["cached_tokens"] = cached
+                m["computed_tokens"] = computed
+                m["prefix_hit_rate"] = cached / total if total else 0.0
+            if m["n_replicas"] > 1 or len(self._stage_metrics[n]) > 1:
+                m["replicas"] = self._replica_snapshots(n)
             out[n] = m
         return out
 

@@ -21,6 +21,13 @@ stages' compute.
 Lifecycle: ``start`` → (``submit`` | engine steps)* → ``stop(drain=...)``
 → ``join``.  ``stop(drain=True)`` lets the worker finish everything
 already admitted or queued; ``drain=False`` exits after the current step.
+
+Multi-replica stages (paper §3.2, flexible GPU allocation): a
+:class:`ReplicaSet` puts N independently-stepping engine replicas behind
+one ``submit`` — a pluggable routing policy picks the replica, and
+``scale_up`` / ``scale_down(drain=True)`` grow or shrink the set at
+runtime without dropping in-flight requests.  The router only ever sees
+the set's queues, so multi-replica serving is invisible to the graph.
 """
 from __future__ import annotations
 
@@ -28,7 +35,7 @@ import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -46,6 +53,8 @@ class StageInput:
     # run if the item is discarded unadmitted (e.g. non-draining shutdown):
     # releases the connector entry the resolve closure would have consumed
     cleanup: Optional[Callable[[], None]] = None
+    # block-hash chain for cache-affinity routing; None = not yet probed
+    affinity_hints: Optional[list] = None
     t_submit: float = field(default_factory=time.perf_counter)
 
 
@@ -65,6 +74,9 @@ class WorkerMetrics:
         self.max_inbox_depth = 0
         self.first_active: Optional[float] = None
         self.last_active: Optional[float] = None
+        # busy seconds banked from engines this replica no longer runs
+        # (scale_down drops the engine object, its dwell must survive)
+        self.retired_busy = 0.0
 
     def note_admit(self, delay: float) -> None:
         with self._lock:
@@ -82,8 +94,19 @@ class WorkerMetrics:
         with self._lock:
             self.max_inbox_depth = max(self.max_inbox_depth, depth)
 
+    def note_retired_busy(self, busy_time: float) -> None:
+        with self._lock:
+            self.retired_busy += busy_time
+
+    def raw_delays(self) -> List[float]:
+        """Copy of the raw queue-delay samples (merged percentiles across
+        replicas, windowed deltas in the scaling controller)."""
+        with self._lock:
+            return list(self.queue_delays)
+
     def snapshot(self, busy_time: float = 0.0) -> Dict[str, float]:
         with self._lock:
+            busy_time = busy_time + self.retired_busy
             qd = np.asarray(self.queue_delays, np.float64)
             span = ((self.last_active - self.first_active)
                     if self.first_active is not None else 0.0)
@@ -115,8 +138,10 @@ class StageWorker:
     def __init__(self, name: str, engine: Any,
                  emit: Callable[[str, StageEvent], None], *,
                  capacity: int = 64,
-                 metrics: Optional[WorkerMetrics] = None) -> None:
-        self.name = name
+                 metrics: Optional[WorkerMetrics] = None,
+                 label: Optional[str] = None) -> None:
+        self.name = name                 # stage name (routing + metrics)
+        self.label = label or name       # thread label (replica-qualified)
         self.engine = engine
         self.emit = emit
         self.inbox: "queue.Queue[Optional[StageInput]]" = queue.Queue(
@@ -127,7 +152,8 @@ class StageWorker:
         self._drain_on_stop = True
         self._stepping = False
         self._thread = threading.Thread(target=self._loop,
-                                        name=f"stage-{name}", daemon=True)
+                                        name=f"stage-{self.label}",
+                                        daemon=True)
         self._started = False
 
     # -- lifecycle ---------------------------------------------------------
@@ -156,6 +182,12 @@ class StageWorker:
     def active(self) -> bool:
         """True while the worker is admitting or stepping (quiescence)."""
         return self._stepping
+
+    def load(self) -> int:
+        """Live load proxy for routing: queued + admitted-but-unfinished
+        work plus one if mid-step.  Advisory (read cross-thread)."""
+        return (self.inbox.qsize() + getattr(self.engine, "queue_depth", 0)
+                + (1 if self._stepping else 0))
 
     # -- producer side -----------------------------------------------------
     def submit(self, item: StageInput,
@@ -262,3 +294,196 @@ class StageWorker:
                     item.cleanup()
                 except Exception:            # noqa: BLE001 — best effort
                     pass
+
+
+class ReplicaSet:
+    """N :class:`StageWorker` replicas behind one logical stage.
+
+    Each replica owns a private engine (its own scheduler, KV pool and
+    thread); the set's ``submit`` picks a replica through a routing policy
+    (``select(stage, [(rid, worker), ...], item) -> rid``) and forwards
+    the bounded put, so per-edge backpressure semantics are unchanged.
+
+    ``scale_up`` adds a replica (a given engine, or one from the stage's
+    engine factory) and ``scale_down(drain=True)`` retires the least
+    loaded replica without losing requests: the victim is removed from
+    the routing set first, in-flight submits targeting it are allowed to
+    land, and only then is its worker stopped with ``drain=True`` — it
+    finishes everything queued plus everything its engine already admitted
+    before the thread exits.
+
+    Replica ids are small integers; a retired id is reused by the next
+    ``scale_up`` so the per-replica metrics bank stays bounded by the
+    maximum concurrent replica count (and keeps accumulating across
+    worker generations, like single-replica restarts always have).
+    """
+
+    def __init__(self, stage: str, engines: List[Any],
+                 emit: Callable[[str, StageEvent], None], *,
+                 capacity: int = 64,
+                 metrics_bank: Optional[Dict[int, WorkerMetrics]] = None,
+                 policy: Any = None,
+                 engine_factory: Optional[Callable[[], Any]] = None) -> None:
+        if not engines:
+            raise ValueError(f"stage {stage!r} needs at least one engine")
+        self.stage = stage
+        self.emit = emit
+        self.capacity = capacity
+        self.policy = policy
+        self.engine_factory = engine_factory
+        self.metrics_bank = metrics_bank if metrics_bank is not None else {}
+        self._lock = threading.Lock()
+        self._replicas: Dict[int, StageWorker] = {}
+        self._order: List[int] = []          # routable replica ids
+        self._pending: Dict[int, int] = {}   # in-flight submit() puts
+        self._rr = 0                         # fallback round-robin cursor
+        self._started = False
+        for rid, eng in enumerate(engines):
+            self._install(rid, eng)
+
+    def _install(self, rid: int, engine: Any) -> StageWorker:
+        w = StageWorker(self.stage, engine, self.emit,
+                        capacity=self.capacity,
+                        metrics=self.metrics_bank.setdefault(
+                            rid, WorkerMetrics()),
+                        label=f"{self.stage}#{rid}")
+        self._replicas[rid] = w
+        self._order.append(rid)
+        return w
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> None:
+        with self._lock:
+            self._started = True
+            workers = list(self._replicas.values())
+        for w in workers:
+            w.start()
+
+    def stop(self, drain: bool = True) -> None:
+        with self._lock:
+            workers = list(self._replicas.values())
+        for w in workers:
+            w.stop(drain=drain)
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        with self._lock:
+            workers = list(self._replicas.values())
+        for w in workers:
+            w.join(timeout)
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def n_replicas(self) -> int:
+        with self._lock:
+            return len(self._order)
+
+    @property
+    def replica_ids(self) -> List[int]:
+        with self._lock:
+            return list(self._order)
+
+    @property
+    def engines(self) -> List[Any]:
+        with self._lock:
+            return [self._replicas[r].engine for r in self._order]
+
+    def workers(self) -> List[Tuple[int, StageWorker]]:
+        with self._lock:
+            return [(r, self._replicas[r]) for r in self._order]
+
+    @property
+    def alive(self) -> bool:
+        with self._lock:
+            return any(w.alive for w in self._replicas.values())
+
+    @property
+    def active(self) -> bool:
+        with self._lock:
+            return any(w.active for w in self._replicas.values())
+
+    def inbox_empty(self) -> bool:
+        with self._lock:
+            return all(w.inbox.empty() for w in self._replicas.values())
+
+    @property
+    def error(self) -> Optional[str]:
+        with self._lock:
+            return next((w.error for w in self._replicas.values()
+                         if w.error), None)
+
+    def queue_depth(self) -> int:
+        """Total live load across replicas (inboxes + engines)."""
+        with self._lock:
+            return sum(w.load() for w in self._replicas.values())
+
+    # -- producer side -----------------------------------------------------
+    def submit(self, item: StageInput,
+               timeout: Optional[float] = None) -> bool:
+        """Route one item to a replica (policy-chosen) and forward the
+        bounded put.  The pending counter pins the chosen replica against
+        a concurrent ``scale_down`` until the put lands."""
+        with self._lock:
+            if not self._order:
+                return False
+            cands = [(r, self._replicas[r]) for r in self._order]
+            if self.policy is not None and len(cands) > 1:
+                rid = self.policy.select(self.stage, cands, item)
+                if rid not in self._replicas:      # policy bug: fall back
+                    rid = cands[0][0]
+            elif len(cands) > 1:
+                rid = cands[self._rr % len(cands)][0]
+                self._rr += 1
+            else:
+                rid = cands[0][0]
+            self._pending[rid] = self._pending.get(rid, 0) + 1
+            w = self._replicas[rid]
+        try:
+            return w.submit(item, timeout=timeout)
+        finally:
+            with self._lock:
+                self._pending[rid] -= 1
+
+    # -- dynamic scaling ---------------------------------------------------
+    def scale_up(self, engine: Any = None) -> Optional[int]:
+        """Add one replica (given engine, or a fresh one from the stage
+        factory); returns its replica id, or None without a source."""
+        if engine is None:
+            if self.engine_factory is None:
+                return None
+            engine = self.engine_factory()       # may be slow: outside lock
+        with self._lock:
+            rid = next(i for i in range(len(self._replicas) + 1)
+                       if i not in self._replicas)
+            w = self._install(rid, engine)
+            started = self._started
+        if started:
+            w.start()
+        return rid
+
+    def scale_down(self, drain: bool = True) -> Optional[int]:
+        """Retire the least-loaded replica; never below one.  With
+        ``drain=True`` (the default) the victim finishes its queued and
+        admitted work before its thread exits — no request is dropped.
+        Returns the retired replica id, or None if the set is at minimum.
+        Blocks until the victim has drained; call from a control thread
+        (the scaling controller), not from the router."""
+        with self._lock:
+            if len(self._order) <= 1:
+                return None
+            rid = min(self._order,
+                      key=lambda r: (self._replicas[r].load(), r))
+            self._order.remove(rid)              # unroutable from now on
+        while True:                              # let in-flight puts land
+            with self._lock:
+                if self._pending.get(rid, 0) == 0:
+                    break
+            time.sleep(0.001)
+        w = self._replicas[rid]
+        w.stop(drain=drain)
+        w.join(timeout=60.0)
+        # bank the retired engine's dwell so stage busy_time survives
+        self.metrics_bank[rid].note_retired_busy(
+            getattr(w.engine, "busy_time", 0.0))
+        with self._lock:
+            del self._replicas[rid]
+        return rid

@@ -144,6 +144,27 @@ class AREngine:
             return hash_token_blocks(rt.prompt_tokens, self.kv.page_size)
         return hash_embed_blocks(pe, self.kv.page_size)
 
+    def affinity_hints(self, inputs: Dict[str, Any]):
+        """Router-side hint chain for cache-affinity routing: the block
+        hashes this request WILL carry if routed here.  Must mirror the
+        token path of ``_block_hashes`` exactly — only tokenized stages
+        without per-request preprocess are hintable (embeds are hashed
+        post-preprocess, which the router cannot reproduce).  Returns None
+        when no stable hint exists."""
+        if not (self.enable_prefix_cache and self._paged
+                and self.preprocess is None and inputs is not None
+                and "kv_seed" not in inputs and "prompt_embeds" not in inputs
+                and "tokens" in inputs):
+            return None
+        return hash_token_blocks(inputs["tokens"], self.kv.page_size)
+
+    def prefix_hint(self, block_hashes) -> int:
+        """Blocks of ``block_hashes`` resident in this replica's prefix
+        cache (read-only, cross-thread safe — used by the router)."""
+        if not (self.enable_prefix_cache and self._paged):
+            return 0
+        return self.scheduler.prefix_hint(block_hashes)
+
     @property
     def prefix_stats(self) -> Dict[str, int]:
         return dict(self.scheduler.prefix_stats)

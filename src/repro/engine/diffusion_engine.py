@@ -27,10 +27,10 @@ from repro.core.request import StageEvent
 from repro.models.dit import DiTConfig, sample as dit_sample
 
 
-@dataclass
-class _DiffJob:
-    req_id: int
-    cond: np.ndarray              # (Tc, cond_dim)
+@dataclass(eq=False)              # identity equality: the generated eq
+class _DiffJob:                   # would elementwise-compare cond arrays
+    req_id: int                   # (and raise on mismatched chunk shapes
+    cond: np.ndarray              # (Tc, cond_dim)    in queue.remove)
     out_len: int
     chunk_index: int = 0
     is_last_chunk: bool = True

@@ -130,7 +130,9 @@ class PageAllocator:
     # -- prefix cache -------------------------------------------------------
     def lookup(self, hashes: Iterable[BlockHash]) -> List[int]:
         """Longest cached prefix: pages for the leading run of hashes that
-        are present in the index (no refcounts are taken)."""
+        are present in the index (no refcounts are taken).  One O(1) dict
+        probe per block — hashes chain, so the scan stops at the first
+        miss and never walks the whole index."""
         pages: List[int] = []
         for h in hashes:
             p = self._hash_to_page.get(h)
@@ -138,6 +140,18 @@ class PageAllocator:
                 break
             pages.append(p)
         return pages
+
+    def prefix_hint(self, hashes: Iterable[BlockHash]) -> int:
+        """Length (in blocks) of the longest indexed prefix of ``hashes``.
+        The cheap read-only probe behind cache-affinity routing: the
+        router calls it cross-thread on every candidate replica, so it
+        must not touch refcounts, the LRU, or any allocator state."""
+        n = 0
+        for h in hashes:
+            if h not in self._hash_to_page:
+                break
+            n += 1
+        return n
 
     def acquire(self, req_id: int, pages: Iterable[int]) -> None:
         """Take a reference on already-resident pages (a prefix hit, or an
@@ -215,6 +229,11 @@ class PageAllocator:
         ok = ok and all(self._hash_to_page.get(h) == p
                         for p, h in self._page_hash.items())
         ok = ok and not (set(self._page_hash) & free_set)
+        # index and page states agree: every indexed page is resident —
+        # either parked in the LRU (cached) or held by a request
+        # (referenced); a page the index points at but neither state owns
+        # would be silently resurrectable garbage
+        ok = ok and set(self._page_hash) <= (lru_set | ref_pages)
         # every refcount-0 cached page is re-acquirable by hash
         ok = ok and lru_set <= set(self._page_hash)
         return ok

@@ -125,6 +125,14 @@ class Scheduler:
         return min(pages_for(tokens, self.kv.page_size),
                    self.kv.max_pages_per_seq)
 
+    def prefix_hint(self, block_hashes: Optional[List[BlockHash]]) -> int:
+        """Cache-affinity probe: blocks of ``block_hashes`` resident in
+        this replica's page index.  Read-only and cross-thread safe (one
+        dict probe per block) — the router scores replicas with it."""
+        if not (self.enable_prefix_cache and block_hashes):
+            return 0
+        return self.allocator.prefix_hint(block_hashes)
+
     def _match_prefix(self, seq: SeqState, total: int):
         """Longest cached prefix usable by ``seq``: (pages, cow_src).
 
@@ -191,6 +199,17 @@ class Scheduler:
         push it to the front of the waiting queue for re-prefill."""
         rid = victim.req_id
         self.running.pop(rid)
+        if self.enable_prefix_cache and victim.block_hashes:
+            # publish the victim's full, KV-complete pages before freeing
+            # them: free() then parks them in the LRU instead of the free
+            # list, so the re-admission's _match_prefix re-acquires the
+            # victim's own prefix instead of recomputing it (and any other
+            # request sharing the prefix hits too)
+            n_full = min(len(victim.block_hashes),
+                         victim.pos // self.kv.page_size)
+            table = self.tables.tables.get(rid, [])
+            self.allocator.publish(table[:n_full],
+                                   victim.block_hashes[:n_full])
         self.allocator.free(rid)
         self.tables.drop(rid)
         self._free_slots.append(victim.slot)

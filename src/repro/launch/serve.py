@@ -40,13 +40,18 @@ def build_single_arch(arch: str, max_batch: int, max_new: int, seed: int = 0,
                       prefix_cache: bool = False):
     cfg = get_config(arch, smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(seed))
-    eng = AREngine(arch, cfg, params, kv=_kv(max_batch), max_batch=max_batch,
-                   enable_prefix_cache=prefix_cache,
-                   default_sampling=SamplingParams(max_new_tokens=max_new,
-                                                   temperature=0.8, top_k=20))
+
+    def make_engine():
+        return AREngine(
+            arch, cfg, params, kv=_kv(max_batch), max_batch=max_batch,
+            enable_prefix_cache=prefix_cache,
+            default_sampling=SamplingParams(max_new_tokens=max_new,
+                                            temperature=0.8, top_k=20))
+
     graph = StageGraph()
     graph.add_stage(StageSpec(arch, "ar", is_output=True))
-    return graph, {arch: eng}, {"cfg": cfg}
+    return graph, {arch: make_engine()}, {
+        "cfg": cfg, "engine_factories": {arch: make_engine}}
 
 
 def _make_inputs(pipeline, rng):
@@ -137,35 +142,78 @@ def main() -> None:
                          "(default on)")
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false")
+    ap.add_argument("--replicas", default=None, metavar="STAGE=N[,STAGE=N]",
+                    help="serve a stage with N engine replicas, e.g. "
+                         "--replicas talker=2,vocoder=2 (threaded backend; "
+                         "stages need an engine factory, which every "
+                         "built-in pipeline provides)")
+    ap.add_argument("--routing", default="affinity",
+                    choices=["round_robin", "least_loaded", "affinity"],
+                    help="replica routing policy: round_robin cycles; "
+                         "least_loaded picks the emptiest; affinity "
+                         "(default) routes to the replica holding the "
+                         "longest cached KV prefix, falling back to "
+                         "least-loaded")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="run the ScalingController: move replicas to the "
+                         "bottleneck stage at runtime from WorkerMetrics "
+                         "(busy fraction + backlog pressure)")
+    ap.add_argument("--replica-budget", type=int, default=None,
+                    help="--autoscale global replica budget (default: the "
+                         "total launched replicas; extra headroom lets the "
+                         "controller ADD replicas instead of moving them)")
+    ap.add_argument("--scale-interval", type=float, default=0.25,
+                    help="--autoscale decision window in seconds")
     args = ap.parse_args()
 
+    replicas = None
+    if args.replicas:
+        replicas = {}
+        for part in args.replicas.split(","):
+            stage, _, n = part.partition("=")
+            if not n:
+                ap.error(f"--replicas: expected STAGE=N, got {part!r}")
+            replicas[stage.strip()] = int(n)
+        if args.backend != "threaded":
+            ap.error("--replicas requires --backend threaded")
+
     if args.pipeline == "qwen_omni":
-        graph, engines, _ = build_qwen_omni(max_batch=args.max_batch,
-                                            prefix_cache=args.prefix_cache)
+        graph, engines, bundle = build_qwen_omni(
+            max_batch=args.max_batch, prefix_cache=args.prefix_cache)
     elif args.pipeline == "qwen3_omni":
-        graph, engines, _ = build_qwen_omni(max_batch=args.max_batch,
-                                            vocoder_kind="cnn",
-                                            prefix_cache=args.prefix_cache)
+        graph, engines, bundle = build_qwen_omni(
+            max_batch=args.max_batch, vocoder_kind="cnn",
+            prefix_cache=args.prefix_cache)
     elif args.pipeline == "glm_image":
-        graph, engines, _ = build_ar_dit("glm_image",
-                                         max_batch=args.max_batch,
-                                         prefix_cache=args.prefix_cache)
+        graph, engines, bundle = build_ar_dit(
+            "glm_image", max_batch=args.max_batch,
+            prefix_cache=args.prefix_cache)
     elif args.pipeline == "mimo_audio":
-        graph, engines, _ = build_mimo_audio(max_batch=args.max_batch,
-                                             prefix_cache=args.prefix_cache)
+        graph, engines, bundle = build_mimo_audio(
+            max_batch=args.max_batch, prefix_cache=args.prefix_cache)
     elif args.pipeline == "pd":
         from repro.configs.pipelines import build_pd_disaggregated
-        graph, engines, _ = build_pd_disaggregated(
+        graph, engines, bundle = build_pd_disaggregated(
             max_batch=args.max_batch, max_new=args.max_new,
             prefix_cache=args.prefix_cache)
     elif args.arch:
-        graph, engines, _ = build_single_arch(args.arch, args.max_batch,
-                                              args.max_new, args.seed,
-                                              prefix_cache=args.prefix_cache)
+        graph, engines, bundle = build_single_arch(
+            args.arch, args.max_batch, args.max_new, args.seed,
+            prefix_cache=args.prefix_cache)
     else:
         ap.error("pass --pipeline or --arch")
 
-    orch = Orchestrator(graph, engines, backend=args.backend)
+    orch = Orchestrator(graph, engines, backend=args.backend,
+                        replicas=replicas, routing=args.routing,
+                        engine_factories=bundle.get("engine_factories"))
+    scaler = None
+    if args.autoscale:
+        from repro.core.scaling import ScalingConfig, ScalingController
+        if args.backend != "threaded":
+            ap.error("--autoscale requires --backend threaded")
+        scaler = ScalingController(orch, ScalingConfig(
+            interval=args.scale_interval,
+            replica_budget=args.replica_budget)).start()
     rng = np.random.default_rng(args.seed)
 
     if args.online:
@@ -199,15 +247,31 @@ def main() -> None:
         if qd:
             print("per-request queueing delay:",
                   {k: f"p95={v['p95']*1e3:.2f}ms" for k, v in qd.items()})
+        if replicas or args.autoscale:
+            print("replicas:", orch.replica_counts(),
+                  f"routing={args.routing}")
+        if scaler is not None:
+            print(f"autoscale: {scaler.windows} windows, "
+                  f"{len(scaler.actions)} action(s)")
+            for a in scaler.actions:
+                src = f" from {a['donor']}" if "donor" in a else ""
+                print(f"  {a['kind']} -> {a['stage']}{src} "
+                      f"(pressure={a['pressure']:.2f} "
+                      f"busy={a['busy']:.2f} backlog={a['backlog']:.0f}) "
+                      f"replicas={a['replicas']}")
     else:
         print("stage busy:", {k: round(v, 3)
                               for k, v in orch.stage_busy_times().items()})
     for kind, st in orch.connector_stats().items():
         print(f"connector[{kind}]: {st.calls} transfers, {st.bytes} bytes, "
               f"{st.wall_time*1e3:.2f} ms wall")
-    for name, eng in engines.items():
-        ps = getattr(eng, "prefix_stats", None)
-        if ps and ps.get("lookups"):
+    for name in graph.stages:
+        ps = {"lookups": 0, "hits": 0, "cached_tokens": 0,
+              "computed_tokens": 0}
+        for eng in orch.stage_replicas[name]:       # summed over replicas
+            for k, v in (getattr(eng, "prefix_stats", None) or {}).items():
+                ps[k] += v
+        if ps["lookups"]:
             tot = ps["cached_tokens"] + ps["computed_tokens"]
             rate = 100.0 * ps["cached_tokens"] / tot if tot else 0.0
             print(f"prefix-cache[{name}]: hits={ps['hits']}/"

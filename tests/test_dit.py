@@ -75,3 +75,26 @@ def test_engine_respects_max_batch():
         done += eng.step()
     assert len(done) == 5
     assert eng.steps == 3                      # ceil(5/2)
+
+
+def test_engine_mixed_chunk_shapes_in_queue():
+    """Jobs with different cond lengths can coexist in the queue (a
+    streaming talker's final short chunk lands among full-size chunks).
+    The dequeue must remove by identity — a fieldwise job comparison
+    would elementwise-compare mismatched cond arrays and raise."""
+    p = init_dit(CFG, jax.random.PRNGKey(0))
+    eng = DiffusionEngine("d", CFG, p, max_batch=4)
+    short = np.random.randn(3, 64).astype(np.float32)
+    full = np.random.randn(6, 64).astype(np.float32)
+    eng.enqueue(0, {"cond": short, "out_len": 4,
+                    "chunk_index": 1, "is_last_chunk": True})
+    for i in range(1, 4):
+        eng.enqueue(i, {"cond": full.copy(), "out_len": 8,
+                        "chunk_index": 0, "is_last_chunk": False})
+    done = []
+    while eng.has_work:
+        done += eng.step()
+    assert sorted(ev.req_id for ev in done) == [0, 1, 2, 3]
+    shapes = {ev.req_id: ev.payload["latent"].shape for ev in done}
+    assert shapes[0] == (4, 16)
+    assert all(shapes[i] == (8, 16) for i in (1, 2, 3))

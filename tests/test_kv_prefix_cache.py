@@ -315,3 +315,45 @@ def test_prefix_cache_off_never_caches():
     assert sched.prefix_stats["lookups"] == 0
     assert sched.allocator.free_pages == kv.num_pages
     assert sched.allocator.cached_pages == 0
+
+
+def test_preempt_publishes_pages_for_reacquisition():
+    """A preemption victim's KV-complete pages are published before they
+    are freed, so its re-admission re-acquires its own prefix through
+    ``_match_prefix`` instead of recomputing the whole prompt."""
+    kv = PagedKVConfig(num_pages=12, page_size=PAGE, max_pages_per_seq=12)
+    sched = Scheduler(kv, max_batch=4, enable_preemption=True,
+                      enable_prefix_cache=True)
+    toks = list(range(6 * PAGE))                 # 6 full hashed blocks
+    sched.add(0, 5 * PAGE, SamplingParams(max_new_tokens=2))   # no hashes
+    sched.add(1, 6 * PAGE, SamplingParams(max_new_tokens=8),
+              block_hashes=_hashes(toks))
+    plan = sched.schedule()
+    assert plan.admitted == [0, 1]               # 5 + 6 pages, 1 free
+    for rid, n in ((0, 5 * PAGE), (1, 6 * PAGE)):
+        sched.note_prefill(rid, n)
+        sched.note_sampled(rid, 0)
+    # decode growth: 0 takes the last free page; 1 finds the pool empty
+    # and (no younger victim) preempts itself
+    plan = sched.schedule()
+    assert plan.preempted == [1]
+    # all 6 KV-complete pages were published, not dropped on the floor
+    assert sched.allocator.cached_pages == 6
+    assert sched.prefix_hint(_hashes(toks)) == 6
+    assert sched.allocator.check_invariant()
+    # finish 0 so its pages free up (unhashed: straight to the free list)
+    sched.note_decode_written(0)
+    assert sched.note_sampled(0, 0)
+    sched.release(0)
+    # re-admission: the victim hits its own published prefix — the whole
+    # page-aligned prompt via CoW, only the last token is recomputed
+    plan = sched.schedule()
+    assert plan.admitted == [1] and len(plan.cow_pairs) == 1
+    seq = sched.running[1]
+    assert seq.resumed
+    assert seq.cached_tokens == 6 * PAGE - 1
+    assert sched.prefix_stats["hits"] == 1       # first admission missed
+    assert sched.allocator.check_invariant()
+    sched.release(1)
+    assert sched.allocator.reusable_pages == kv.num_pages
+    assert sched.allocator.check_invariant()

@@ -169,3 +169,40 @@ def test_ssm_engine_rejects_prefix_cache_and_masks_inactive_slots():
             break
     assert results[0] == _greedy_reference(cfg, params, pa, 8)
     assert results[1] == _greedy_reference(cfg, params, pb, 8)
+
+
+def test_preempted_request_reacquires_published_prefix(lm):
+    """Preemption + prefix cache together: the victim's pages are
+    published at eviction, its re-admission re-acquires them (cached
+    tokens instead of a full re-prefill), and greedy outputs still match
+    the unpressured reference exactly."""
+    cfg, params = lm
+    rng = np.random.default_rng(7)
+    # pool fits the prompts but not their decode growth -> churn
+    kv = PagedKVConfig(num_pages=12, page_size=8, max_pages_per_seq=12)
+    n_new = 16
+    eng = AREngine("pre", cfg, params, kv=kv, max_batch=3,
+                   enable_prefix_cache=True,
+                   default_sampling=SamplingParams(max_new_tokens=n_new,
+                                                   temperature=0.0))
+    eng.scheduler.enable_preemption = True
+    prompts = [rng.integers(0, 256, size=40).astype(np.int32)
+               for _ in range(3)]
+    for i, p in enumerate(prompts):
+        eng.enqueue(i, {"tokens": p}, SamplingParams(), {})
+    results = {}
+    for _ in range(2000):
+        for ev in eng.step():
+            if ev.kind == "finished":
+                results[ev.req_id] = list(ev.payload["tokens"])
+        assert eng.scheduler.allocator.check_invariant()
+        if not eng.has_work:
+            break
+    assert len(results) == 3
+    assert eng.scheduler.preemptions >= 1, "test must exercise preemption"
+    # at least one re-admission hit the victim's own published pages
+    st = eng.prefix_stats
+    assert st["hits"] >= 1 and st["cached_tokens"] > 0
+    for i, p in enumerate(prompts):
+        want = _greedy_reference(cfg, params, p, n_new)
+        assert results[i] == want, (i, results[i], want)

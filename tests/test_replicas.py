@@ -1,0 +1,327 @@
+"""Multi-replica stage serving: routing policies, scale_up/scale_down
+lifecycle, per-replica metrics, and the metrics-driven ScalingController.
+
+Uses pure-python stub engines (no jax) so this module is in the fast tier.
+"""
+import time
+
+import pytest
+
+from repro.core.graph import StageGraph
+from repro.core.metrics import stage_report
+from repro.core.orchestrator import (CacheAffinityPolicy, Orchestrator,
+                                     make_routing_policy)
+from repro.core.request import Request, StageEvent
+from repro.core.scaling import ScalingConfig, ScalingController
+from repro.core.stage import StageSpec
+from repro.core.worker import StageInput
+
+
+class StubEngine:
+    """One finished event per queued item, optional per-step dwell."""
+
+    def __init__(self, name, delay=0.0):
+        self.name = name
+        self.delay = delay
+        self.q = []
+        self.busy_time = 0.0
+
+    def enqueue(self, req_id, inputs, sampling, data):
+        self.q.append((req_id, dict(inputs)))
+
+    @property
+    def has_work(self):
+        return bool(self.q)
+
+    @property
+    def queue_depth(self):
+        return len(self.q)
+
+    def step(self):
+        if not self.q:
+            return []
+        if self.delay:
+            time.sleep(self.delay)
+        self.busy_time += self.delay
+        rid, inp = self.q.pop(0)
+        return [StageEvent(rid, "finished", {"x": inp.get("x", 0) + 1},
+                           stage=self.name)]
+
+
+def _single_stage(n_replicas, delay=0.0, routing="least_loaded",
+                  factory=False):
+    graph = StageGraph()
+    graph.add_stage(StageSpec("s", "custom", is_output=True))
+    engines = {"s": [StubEngine("s", delay) for _ in range(n_replicas)]}
+    facs = {"s": lambda: StubEngine("s", delay)} if factory else None
+    return Orchestrator(graph, engines, routing=routing,
+                        engine_factories=facs)
+
+
+def _serve(orch, n):
+    reqs = [Request(inputs={"x": 0}) for _ in range(n)]
+    for r in reqs:
+        orch.submit(r)
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# routing policies (pure, deterministic)
+# ---------------------------------------------------------------------------
+
+class _FakeEngine:
+    def __init__(self, resident_blocks):
+        self.resident_blocks = resident_blocks
+
+    def prefix_hint(self, hints):
+        return min(self.resident_blocks, len(hints))
+
+
+class _FakeWorker:
+    def __init__(self, resident_blocks=0, load=0):
+        self.engine = _FakeEngine(resident_blocks)
+        self._load = load
+
+    def load(self):
+        return self._load
+
+
+def _item(hints=None, inputs=None):
+    return StageInput(Request(inputs=inputs or {}), None, inputs=inputs,
+                      affinity_hints=hints)
+
+
+HINTS = [("tok", b"a"), ("tok", b"b"), ("tok", b"c")]
+
+
+def test_affinity_deterministic_given_fixed_hints():
+    pol = make_routing_policy("affinity")
+    assert isinstance(pol, CacheAffinityPolicy)
+    # longest prefix match wins even over an idle zero-hint replica
+    replicas = [(0, _FakeWorker(resident_blocks=0, load=0)),
+                (1, _FakeWorker(resident_blocks=2, load=5)),
+                (2, _FakeWorker(resident_blocks=1, load=0))]
+    for _ in range(10):
+        assert pol.select("s", replicas, _item(hints=HINTS)) == 1
+    # ties on the hint break by load, then lowest replica id
+    tied = [(0, _FakeWorker(2, load=3)), (1, _FakeWorker(2, load=0)),
+            (2, _FakeWorker(2, load=0))]
+    for _ in range(10):
+        assert pol.select("s", tied, _item(hints=HINTS)) == 1
+
+
+def test_affinity_falls_back_to_least_loaded():
+    pol = make_routing_policy("affinity")
+    replicas = [(0, _FakeWorker(0, load=4)), (1, _FakeWorker(0, load=1))]
+    # zero hint everywhere -> least loaded
+    assert pol.select("s", replicas, _item(hints=HINTS)) == 1
+    # no hints computable: probed once, cached as [] on the item
+    item = _item(inputs={"x": 1})
+    assert pol.select("s", replicas, item) == 1
+    assert item.affinity_hints == []
+
+
+def test_round_robin_cycles_per_stage():
+    pol = make_routing_policy("round_robin")
+    replicas = [(0, _FakeWorker()), (1, _FakeWorker()), (2, _FakeWorker())]
+    picks = [pol.select("s", replicas, _item()) for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+    assert pol.select("other", replicas, _item()) == 0   # per-stage cursor
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        make_routing_policy("hash_ring")
+
+
+# ---------------------------------------------------------------------------
+# ReplicaSet serving + scaling lifecycle
+# ---------------------------------------------------------------------------
+
+def test_replicas_serve_and_report_per_replica_metrics():
+    orch = _single_stage(2, delay=0.004)
+    orch.start()
+    reqs = _serve(orch, 10)
+    assert orch.drain(timeout=30.0)
+    orch.shutdown()
+    assert all(r.completion_time is not None and not r.failed for r in reqs)
+    sm = orch.stage_metrics()
+    assert sm["s"]["admitted"] == 10 and sm["s"]["n_replicas"] == 2
+    reps = sm["s"]["replicas"]
+    assert set(reps) == {0, 1}
+    assert sum(r["admitted"] for r in reps.values()) == 10
+    # least-loaded under a 4ms dwell spreads work across both replicas
+    assert all(r["admitted"] > 0 for r in reps.values())
+    report = stage_report(sm)
+    assert "s/0" in report and "s/1" in report
+
+
+def test_scale_down_drain_loses_no_requests():
+    orch = _single_stage(3, delay=0.005)
+    orch.start()
+    reqs = _serve(orch, 24)                  # queued across all 3 replicas
+    retired = orch.scale_down("s", drain=True)
+    assert retired is True
+    assert orch.replica_counts() == {"s": 2}
+    assert orch.drain(timeout=30.0)
+    orch.shutdown()
+    assert all(r.completion_time is not None and not r.failed for r in reqs)
+    assert orch.stage_metrics()["s"]["finished"] == 24
+
+
+def test_retired_replica_never_routed():
+    orch = _single_stage(2, delay=0.002, routing="least_loaded")
+    orch.start()
+    _serve(orch, 4)
+    rs = orch._workers["s"]
+    rid = rs.scale_down(drain=True)
+    assert rid is not None
+    admitted_at_retire = orch._stage_metrics["s"][rid].admitted
+    reqs = _serve(orch, 12)                  # all must land on the survivor
+    assert orch.drain(timeout=30.0)
+    orch.shutdown()
+    assert all(not r.failed for r in reqs)
+    assert orch._stage_metrics["s"][rid].admitted == admitted_at_retire
+    assert rid not in rs.replica_ids
+
+
+def test_scale_floor_is_one_replica():
+    orch = _single_stage(1)
+    orch.start()
+    assert orch.scale_down("s") is False
+    orch.shutdown()
+
+
+def test_scale_up_at_runtime_and_rid_reuse():
+    orch = _single_stage(2, delay=0.002, factory=True)
+    orch.start()
+    rs = orch._workers["s"]
+    retired = rs.scale_down(drain=True)
+    assert rs.scale_up() == retired          # smallest free id is reused
+    assert orch.replica_counts() == {"s": 2}
+    reqs = _serve(orch, 8)
+    assert orch.drain(timeout=30.0)
+    orch.shutdown()
+    assert all(not r.failed for r in reqs)
+    # restart keeps the scaled topology (engines synced at shutdown)
+    assert len(orch.stage_replicas["s"]) == 2
+
+
+def test_replica_spec_without_factory_rejected():
+    graph = StageGraph()
+    graph.add_stage(StageSpec("s", "custom", is_output=True))
+    with pytest.raises(ValueError, match="factory"):
+        Orchestrator(graph, {"s": StubEngine("s")}, replicas={"s": 3})
+
+
+def test_sync_backend_rejects_multi_replica():
+    graph = StageGraph()
+    graph.add_stage(StageSpec("s", "custom", is_output=True))
+    with pytest.raises(ValueError, match="single-replica"):
+        Orchestrator(graph, {"s": [StubEngine("s"), StubEngine("s")]},
+                     backend="sync")
+
+
+# ---------------------------------------------------------------------------
+# connector accounting with replicas
+# ---------------------------------------------------------------------------
+
+def test_connector_resident_bytes_balanced_across_replicas():
+    import numpy as np
+
+    class BlobEngine(StubEngine):
+        def step(self):                      # payload with real bytes, so
+            evs = super().step()             # the shm pool holds something
+            for ev in evs:
+                ev.payload["blob"] = np.zeros(256, np.float32)
+            return evs
+
+    graph = StageGraph()
+    graph.add_stage(StageSpec("a", "custom"))
+    graph.add_stage(StageSpec("b", "custom", is_output=True))
+    graph.add_edge("a", "b", lambda d, p: {"x": p["x"]}, connector="shm")
+    engines = {"a": BlobEngine("a"),
+               "b": [StubEngine("b", 0.002) for _ in range(3)]}
+    orch = Orchestrator(graph, engines, routing="least_loaded")
+    reqs = _serve(orch, 12)
+    orch.run(timeout=60.0)
+    assert all(r.completion_time is not None and not r.failed for r in reqs)
+    conn = orch.connectors["shm"]
+    # every transfer was received+released by exactly one replica worker:
+    # lifetimes balance even though three threads consume the channel
+    assert conn.stats.calls == 12
+    assert conn.peak_resident_bytes > 0
+    assert conn.resident_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# metrics-driven scaling controller
+# ---------------------------------------------------------------------------
+
+def test_autoscale_moves_replica_to_bottleneck():
+    graph = StageGraph()
+    graph.add_stage(StageSpec("pre", "custom"))
+    graph.add_stage(StageSpec("gen", "custom", is_output=True))
+    graph.add_edge("pre", "gen", lambda d, p: {"x": p["x"]})
+    engines = {"pre": [StubEngine("pre", 0.001) for _ in range(2)],
+               "gen": [StubEngine("gen", 0.02) for _ in range(2)]}
+    facs = {"pre": lambda: StubEngine("pre", 0.001),
+            "gen": lambda: StubEngine("gen", 0.02)}
+    orch = Orchestrator(graph, engines, routing="least_loaded",
+                        engine_factories=facs)
+    ctl = ScalingController(orch, ScalingConfig(
+        interval=0.1, cooldown=0, replica_budget=4))
+    orch.start()
+    reqs = _serve(orch, 30)
+    ctl.tick()                               # baseline measurement window
+    action = None
+    for _ in range(30):                      # gen saturates within ~100ms
+        time.sleep(0.1)
+        action = ctl.tick()
+        if action:
+            break
+    assert action is not None, "controller never acted on the bottleneck"
+    assert action["kind"] == "move" and action["stage"] == "gen"
+    assert action["donor"] == "pre"
+    assert orch.replica_counts() == {"pre": 1, "gen": 3}
+    assert ctl.actions and ctl.actions[-1]["replicas"]["gen"] == 3
+    assert orch.drain(timeout=60.0)
+    orch.shutdown()
+    assert all(r.completion_time is not None and not r.failed for r in reqs)
+    assert orch.stage_metrics()["gen"]["finished"] == 30
+
+
+def test_autoscale_add_uses_budget_headroom():
+    orch = _single_stage(1, delay=0.02, factory=True)
+    ctl = ScalingController(orch, ScalingConfig(
+        interval=0.1, cooldown=0, replica_budget=2))
+    orch.start()
+    reqs = _serve(orch, 20)
+    ctl.tick()
+    action = None
+    for _ in range(30):
+        time.sleep(0.1)
+        action = ctl.tick()
+        if action:
+            break
+    assert action is not None and action["kind"] == "add"
+    assert orch.replica_counts() == {"s": 2}
+    assert orch.drain(timeout=60.0)
+    orch.shutdown()
+    assert all(not r.failed for r in reqs)
+
+
+def test_autoscale_respects_budget_and_factory_gate():
+    # no factory: the controller must never act, however hot the stage is
+    orch = _single_stage(1, delay=0.02, factory=False)
+    ctl = ScalingController(orch, ScalingConfig(
+        interval=0.1, cooldown=0, replica_budget=4))
+    orch.start()
+    reqs = _serve(orch, 10)
+    ctl.tick()
+    time.sleep(0.15)
+    assert ctl.tick() is None
+    assert orch.replica_counts() == {"s": 1}
+    assert orch.drain(timeout=60.0)
+    orch.shutdown()
+    assert all(not r.failed for r in reqs)
