@@ -1,10 +1,16 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+STAMP := $(shell date -u +%Y%m%dT%H%M%SZ)
+SMOKE_DUMPS := BENCH_prefix_cache.json BENCH_online.json \
+    BENCH_replicas.json BENCH_radix.json
 
-.PHONY: test test-fast check serve-online bench-online bench-smoke \
-    bench-compare
+.PHONY: test test-fast lint check serve-online bench-online bench-smoke \
+    bench-compare bench-trend
 
-# default pre-commit check: sub-minute smoke subset
-check: test-fast
+# default pre-commit check: repo-wide lint + sub-minute smoke subset
+check: lint test-fast
+
+lint:
+	python tools/lint.py
 
 test-fast:
 	$(PY) -m pytest -q -m fast
@@ -22,17 +28,27 @@ serve-online:
 bench-online:
 	$(PY) -m benchmarks.bench_online
 
-# sub-minute benchmark smoke: online serving + prefix caching + replica
-# scaling, JSON out, then a cross-run trend table over the dumps
+# sub-minute benchmark smoke: online serving + prefix caching (flat and
+# radix) + replica scaling.  Each dump is archived under
+# benchmarks/history/ with a UTC timestamp so benchmarks/compare.py
+# --archive can render the cross-PR trend.
 bench-smoke:
 	$(PY) -m benchmarks.bench_prefix_cache --smoke \
 	    --json BENCH_prefix_cache.json
 	$(PY) -m benchmarks.bench_online --smoke --json BENCH_online.json
 	$(PY) -m benchmarks.bench_replicas --smoke --json BENCH_replicas.json
-	$(PY) -m benchmarks.compare BENCH_prefix_cache.json \
-	    BENCH_online.json BENCH_replicas.json || true
+	$(PY) -m benchmarks.bench_radix --smoke --json BENCH_radix.json
+	mkdir -p benchmarks/history
+	for f in $(SMOKE_DUMPS); do \
+	    cp $$f benchmarks/history/$(STAMP)_$$f; done
+	$(PY) -m benchmarks.compare $(SMOKE_DUMPS) || true
+	$(PY) -m benchmarks.compare --archive || true
 
 # diff two or more BENCH_*.json dumps (regression table / trend):
 #   make bench-compare FILES="old.json new.json"
 bench-compare:
 	$(PY) -m benchmarks.compare $(FILES)
+
+# cross-run trend from everything archived under benchmarks/history/
+bench-trend:
+	$(PY) -m benchmarks.compare --archive

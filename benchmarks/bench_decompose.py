@@ -3,7 +3,6 @@ Thinker-Talker pipeline (Qwen3-Omni style, CNN vocoder). The paper's
 finding: the Talker dominates because it generates ~3.6x more tokens."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import prompts, run_batch, warmup
 from repro.configs.pipelines import build_qwen_omni

@@ -10,10 +10,9 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models.dit import DiTConfig, dit_forward, init_dit, sample
+from repro.models.dit import DiTConfig, init_dit, sample
 
 
 def run(n_requests: int = 8, cond_len: int = 24, out_len: int = 48,

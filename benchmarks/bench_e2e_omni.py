@@ -15,7 +15,6 @@ from repro.baselines.monolithic import MonolithicQwenOmni
 from repro.configs.pipelines import build_qwen_omni
 from repro.core.metrics import summarize_queueing
 from repro.core.orchestrator import Orchestrator
-from repro.core.request import Request
 from repro.models.dit import DiTConfig, init_dit
 import jax
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 import argparse
 import queue as _queue
 import time
-from typing import Dict, List
+from typing import List
 
 import jax
 import numpy as np

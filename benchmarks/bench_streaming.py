@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import prompts, warmup
 from repro.configs.pipelines import build_qwen_omni

@@ -12,14 +12,25 @@ are higher-is-better and the regression sign flips accordingly.
 
   PYTHONPATH=src python -m benchmarks.compare BENCH_a.json BENCH_b.json \
       [BENCH_c.json ...] [--threshold 10] [--fail-on-regression]
+
+``--archive`` mode instead scans ``benchmarks/history/`` (where ``make
+bench-smoke`` drops a ``<UTC-stamp>_BENCH_<bench>.json`` copy of every
+dump) and renders one trend table per bench, oldest run first — the
+cross-PR trajectory of each metric:
+
+  PYTHONPATH=src python -m benchmarks.compare --archive [--last 6]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import re
 import sys
 from typing import Dict, List
+
+HISTORY_DIR = os.path.join(os.path.dirname(__file__), "history")
+_ARCHIVE_RE = re.compile(r"^(?P<stamp>[0-9TZ]+)_(?P<bench>BENCH_.+)\.json$")
 
 
 HIGHER_IS_BETTER = ("_rate", "_per_s", "equality", "speedup")
@@ -49,7 +60,10 @@ def regression(name: str, old: float, new: float) -> float:
 
 
 def compare(paths: List[str], threshold: float) -> int:
-    runs = [(os.path.basename(p), load(p)) for p in paths]
+    return table([(os.path.basename(p), load(p)) for p in paths], threshold)
+
+
+def table(runs: List[tuple], threshold: float) -> int:
     names: List[str] = []
     for _, rows in runs:                 # first-seen order, union
         for n in rows:
@@ -82,18 +96,56 @@ def compare(paths: List[str], threshold: float) -> int:
     return regressions
 
 
+def archive_trend(history_dir: str, threshold: float, last: int) -> int:
+    """One trend table per bench over the archived bench-smoke dumps."""
+    groups: Dict[str, List[tuple]] = {}
+    try:
+        entries = sorted(os.listdir(history_dir))
+    except FileNotFoundError:
+        entries = []
+    for fname in entries:                # sorted => chronological stamps
+        m = _ARCHIVE_RE.match(fname)
+        if m:
+            groups.setdefault(m.group("bench"), []).append(
+                (m.group("stamp"), os.path.join(history_dir, fname)))
+    if not groups:
+        print(f"no archived runs under {history_dir} "
+              "(run `make bench-smoke` to populate it)")
+        return 0
+    regressions = 0
+    for bench in sorted(groups):
+        runs = groups[bench][-last:]
+        print(f"\n== {bench} ({len(runs)} archived run(s), oldest first)")
+        regressions += table([(stamp, load(path)) for stamp, path in runs],
+                             threshold)
+    return regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("files", nargs="+", help="2+ BENCH_*.json files, "
+    ap.add_argument("files", nargs="*", help="2+ BENCH_*.json files, "
                     "oldest (baseline) first")
+    ap.add_argument("--archive", action="store_true",
+                    help="render per-bench trends from benchmarks/history/ "
+                    "instead of comparing explicit files")
+    ap.add_argument("--history-dir", default=HISTORY_DIR,
+                    help="archive directory for --archive mode")
+    ap.add_argument("--last", type=int, default=8,
+                    help="--archive: show at most the last N runs per bench")
     ap.add_argument("--threshold", type=float, default=10.0,
                     help="regression flag threshold in percent")
     ap.add_argument("--fail-on-regression", action="store_true",
                     help="exit 1 if any metric regressed past threshold")
     args = ap.parse_args()
-    if len(args.files) < 2:
-        ap.error("need at least two files to compare")
-    n = compare(args.files, args.threshold)
+    if args.archive:
+        if args.files:
+            ap.error("--archive takes no positional files")
+        n = archive_trend(args.history_dir, args.threshold, args.last)
+    else:
+        if len(args.files) < 2:
+            ap.error("need at least two files to compare "
+                     "(or use --archive)")
+        n = compare(args.files, args.threshold)
     if args.fail_on_regression and n:
         sys.exit(1)
 

@@ -8,8 +8,8 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 # Layer kind codes (per-layer layout string):
 #   'A' = attention + MLP transformer block (dense / moe decided by cfg)

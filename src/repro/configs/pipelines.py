@@ -13,8 +13,6 @@ one the full configs would use.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -55,7 +55,7 @@ def _report_row(label: str, m: Dict[str, float], cols: List[str]) -> str:
     for c in cols:
         v = m.get(c, 0)
         cells.append((f"{v:.4f}" if isinstance(v, float)
-                      else str(v)).rjust(17))
+                      else str(v)).rjust(18))
     return label.ljust(12) + "".join(cells)
 
 
@@ -68,8 +68,9 @@ def stage_report(stage_metrics: Dict[str, Dict[str, float]]) -> str:
             "finished_per_s", "queue_delay_p50", "queue_delay_p95",
             "max_inbox_depth"]
     if any("prefix_hit_rate" in m for m in stage_metrics.values()):
-        cols += ["cached_tokens", "computed_tokens", "prefix_hit_rate"]
-    head = "stage".ljust(12) + "".join(c.rjust(17) for c in cols)
+        cols += ["cached_tokens", "computed_tokens", "full_block_tokens",
+                 "partial_tokens", "prefix_hit_rate"]
+    head = "stage".ljust(12) + "".join(c.rjust(18) for c in cols)
     lines = [head]
     for stage, m in stage_metrics.items():
         lines.append(_report_row(stage, m, cols))

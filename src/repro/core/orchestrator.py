@@ -139,7 +139,8 @@ class Orchestrator:
                  recv_timeout: float = 60.0,
                  replicas: Optional[Dict[str, int]] = None,
                  routing: Any = "affinity",
-                 engine_factories: Optional[Dict[str, Any]] = None):
+                 engine_factories: Optional[Dict[str, Any]] = None,
+                 warm_seed: bool = True):
         graph.validate()
         if backend not in ("threaded", "sync"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -169,6 +170,7 @@ class Orchestrator:
             raise ValueError("sync (lock-step) backend is single-replica")
         self.routing = (routing if isinstance(routing, RoutingPolicy)
                         else make_routing_policy(routing))
+        self.warm_seed = warm_seed
         # one connector instance per backend kind (shared across edges)
         kinds = {e.connector for e in graph.edges}
         self.connectors = connectors or {k: make_connector(k) for k in kinds}
@@ -193,6 +195,10 @@ class Orchestrator:
             StageGraph.edge_id(e): {"transfers": 0, "backpressure_s": 0.0}
             for e in graph.edges}
         self._events: "queue.Queue[tuple]" = queue.Queue()
+        # per-(edge, request) chunk sequence counters, stamped at the
+        # connector boundary; destination workers assert per-request FIFO.
+        # Router-thread only — no lock needed.
+        self._edge_seq: Dict[Tuple[str, int], int] = {}
         self._unrouted = 0
         self._counter_lock = threading.Lock()
         self._router_thread: Optional[threading.Thread] = None
@@ -251,7 +257,8 @@ class Orchestrator:
                              capacity=self.queue_capacity,
                              metrics_bank=self._stage_metrics[name],
                              policy=self.routing,
-                             engine_factory=self.engine_factories.get(name))
+                             engine_factory=self.engine_factories.get(name),
+                             warm_seed=self.warm_seed)
             for name in self.graph.stages}
         self._started = True
         for w in self._workers.values():
@@ -389,6 +396,14 @@ class Orchestrator:
     # ------------------------------------------------------------------
     # routing (runs on the router thread, or on the caller in sync mode)
     # ------------------------------------------------------------------
+    def _forget_request(self, req_id: int) -> None:
+        """Release per-request routing state: edge chunk-seq counters and
+        the replica sets' sticky chunk-stream pins."""
+        for k in [k for k in self._edge_seq if k[1] == req_id]:
+            self._edge_seq.pop(k, None)
+        for w in self._workers.values():
+            w.forget(req_id)
+
     def _fail(self, req: Request, msg: str) -> None:
         with self._lock:
             if req.completion_time is not None:
@@ -398,6 +413,7 @@ class Orchestrator:
             req.completion_time = time.perf_counter()
             self._outputs_pending.pop(req.req_id, None)
             self.completed.append(req)
+        self._forget_request(req.req_id)
         self.completions.put(req)
 
     def _finish(self, req: Request) -> None:
@@ -405,6 +421,7 @@ class Orchestrator:
             req.completion_time = time.perf_counter()
             self._outputs_pending.pop(req.req_id, None)
             self.completed.append(req)
+        self._forget_request(req.req_id)
         self.completions.put(req)
 
     @staticmethod
@@ -445,6 +462,16 @@ class Orchestrator:
             item = StageInput(req, self._sp(req), resolve=resolve,
                               origin=f"transfer {eid}",
                               cleanup=lambda: conn.release(key))
+            if edge.streaming and kind == "chunk":
+                # stamp the connector-boundary sequence number: the
+                # destination worker asserts per-request FIFO on it and
+                # the replica set pins the stream to one replica
+                sk = (eid, req.req_id)
+                item.seq = self._edge_seq.get(sk, -1) + 1
+                self._edge_seq[sk] = item.seq
+                item.seq_last = is_last
+                if is_last:
+                    self._edge_seq.pop(sk, None)
             t0 = time.perf_counter()
             ok = self._workers[edge.dst].submit(item)
             es = self.edge_stats[eid]
@@ -584,7 +611,8 @@ class Orchestrator:
         reps = self._replica_snapshots(name)
         agg: Dict[str, float] = {}
         for c in ("admitted", "filtered", "finished", "events", "steps",
-                  "errors", "busy_time", "finished_per_s"):
+                  "errors", "order_violations", "busy_time",
+                  "finished_per_s"):
             agg[c] = sum(r[c] for r in reps.values())
         agg["max_inbox_depth"] = max(
             (r["max_inbox_depth"] for r in reps.values()), default=0)
@@ -612,6 +640,7 @@ class Orchestrator:
         for n in self.graph.stages:
             m = self._aggregate_stage(n)
             cached = computed = lookups = hits = 0
+            full_blk = part = 0
             for eng in self._live_engines(n):
                 ps = getattr(eng, "prefix_stats", None)
                 if ps is not None:
@@ -619,11 +648,17 @@ class Orchestrator:
                     hits += ps.get("hits", 0)
                     cached += ps.get("cached_tokens", 0)
                     computed += ps.get("computed_tokens", 0)
+                    full_blk += ps.get("full_block_tokens", 0)
+                    part += ps.get("partial_tokens", 0)
             if lookups:
                 total = cached + computed
                 m["cached_tokens"] = cached
                 m["computed_tokens"] = computed
+                m["full_block_tokens"] = full_blk
+                m["partial_tokens"] = part
                 m["prefix_hit_rate"] = cached / total if total else 0.0
+                m["full_hit_rate"] = full_blk / total if total else 0.0
+                m["partial_hit_rate"] = part / total if total else 0.0
             if m["n_replicas"] > 1 or len(self._stage_metrics[n]) > 1:
                 m["replicas"] = self._replica_snapshots(n)
             out[n] = m

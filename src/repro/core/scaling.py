@@ -161,6 +161,8 @@ class ScalingController:
         if self.orch.engine_factories.get(hot_name) is None:
             return None           # can't build replicas for this stage
         action: Optional[Dict[str, Any]] = None
+        rs = self.orch._workers.get(hot_name)
+        n_seeds = len(getattr(rs, "seed_events", ())) if rs else 0
         if total < budget and self.orch.scale_up(hot_name):
             action = {"kind": "add", "stage": hot_name}
         else:
@@ -177,6 +179,10 @@ class ScalingController:
                               "donor": donor,
                               "donor_pressure": wins[donor].pressure}
         if action is not None:
+            if rs is not None and len(rs.seed_events) > n_seeds:
+                # the scale_up above warm-seeded the new replica's prefix
+                # cache from a sibling — record it with the decision
+                action["warm_seed"] = dict(rs.seed_events[-1])
             action.update({
                 "t": time.perf_counter(),
                 "pressure": hot.pressure,

@@ -54,7 +54,13 @@ class StageInput:
     # releases the connector entry the resolve closure would have consumed
     cleanup: Optional[Callable[[], None]] = None
     # block-hash chain for cache-affinity routing; None = not yet probed
-    affinity_hints: Optional[list] = None
+    affinity_hints: Optional[Any] = None
+    # per-request monotonic sequence number, stamped at the connector
+    # boundary on streamed chunks (None = unordered item).  The destination
+    # worker asserts strictly-increasing delivery per request; the replica
+    # set routes all seq-carrying items of one request to one replica.
+    seq: Optional[int] = None
+    seq_last: bool = False              # final chunk: tracker entry drops
     t_submit: float = field(default_factory=time.perf_counter)
 
 
@@ -71,6 +77,7 @@ class WorkerMetrics:
         self.events = 0
         self.steps = 0
         self.errors = 0
+        self.order_violations = 0       # out-of-order streamed chunks seen
         self.max_inbox_depth = 0
         self.first_active: Optional[float] = None
         self.last_active: Optional[float] = None
@@ -117,6 +124,7 @@ class WorkerMetrics:
                 "events": self.events,
                 "steps": self.steps,
                 "errors": self.errors,
+                "order_violations": self.order_violations,
                 "max_inbox_depth": self.max_inbox_depth,
                 "queue_delay_mean": float(qd.mean()) if qd.size else 0.0,
                 "queue_delay_p50": (float(np.percentile(qd, 50))
@@ -148,6 +156,7 @@ class StageWorker:
             maxsize=capacity)
         self.metrics = metrics or WorkerMetrics()
         self.error: Optional[str] = None            # fatal engine failure
+        self._last_seq: Dict[int, int] = {}         # req_id -> last chunk seq
         self._stop = threading.Event()
         self._drain_on_stop = True
         self._stepping = False
@@ -216,6 +225,25 @@ class StageWorker:
         delay = time.perf_counter() - item.t_submit
         self.metrics.note_admit(delay)
         req.note_queue_delay(self.name, delay)
+        if item.seq is not None:
+            # per-request FIFO assertion: streamed chunks must arrive in
+            # the order the connector stamped them.  Strictly-increasing
+            # (not +1) so a replica handoff mid-stream stays legal while
+            # reorders and duplicates within one worker are caught.
+            last = self._last_seq.get(req.req_id)
+            if last is not None and item.seq <= last:
+                self.metrics.order_violations += 1
+                self.metrics.errors += 1
+                self.emit(self.name, StageEvent(
+                    req.req_id, "error",
+                    {"error": f"{item.origin}: out-of-order chunk "
+                              f"seq={item.seq} after {last}"},
+                    stage=self.name))
+                return
+            if item.seq_last:
+                self._last_seq.pop(req.req_id, None)
+            else:
+                self._last_seq[req.req_id] = item.seq
         try:
             inputs = item.inputs
             if item.resolve is not None:
@@ -323,7 +351,8 @@ class ReplicaSet:
                  capacity: int = 64,
                  metrics_bank: Optional[Dict[int, WorkerMetrics]] = None,
                  policy: Any = None,
-                 engine_factory: Optional[Callable[[], Any]] = None) -> None:
+                 engine_factory: Optional[Callable[[], Any]] = None,
+                 warm_seed: bool = True) -> None:
         if not engines:
             raise ValueError(f"stage {stage!r} needs at least one engine")
         self.stage = stage
@@ -331,11 +360,18 @@ class ReplicaSet:
         self.capacity = capacity
         self.policy = policy
         self.engine_factory = engine_factory
+        self.warm_seed = warm_seed
+        #: audit trail of warm scale-ups: {"rid", "donor", "pages"}
+        self.seed_events: List[Dict[str, int]] = []
         self.metrics_bank = metrics_bank if metrics_bank is not None else {}
         self._lock = threading.Lock()
         self._replicas: Dict[int, StageWorker] = {}
         self._order: List[int] = []          # routable replica ids
         self._pending: Dict[int, int] = {}   # in-flight submit() puts
+        # seq-carrying (streamed-chunk) items stick to one replica per
+        # request — splitting a chunk stream across replicas would admit
+        # it out of order at two engines at once
+        self._sticky: Dict[int, int] = {}
         self._rr = 0                         # fallback round-robin cursor
         self._started = False
         for rid, eng in enumerate(engines):
@@ -426,7 +462,11 @@ class ReplicaSet:
             if not self._order:
                 return False
             cands = [(r, self._replicas[r]) for r in self._order]
-            if self.policy is not None and len(cands) > 1:
+            sticky = (self._sticky.get(item.request.req_id)
+                      if item.seq is not None else None)
+            if sticky is not None and sticky in self._order:
+                rid = sticky                       # keep the chunk stream
+            elif self.policy is not None and len(cands) > 1:
                 rid = self.policy.select(self.stage, cands, item)
                 if rid not in self._replicas:      # policy bug: fall back
                     rid = cands[0][0]
@@ -435,6 +475,10 @@ class ReplicaSet:
                 self._rr += 1
             else:
                 rid = cands[0][0]
+            if item.seq is not None:
+                # pin the rest of this request's chunk stream here —
+                # FIFO only holds within one replica's inbox
+                self._sticky[item.request.req_id] = rid
             self._pending[rid] = self._pending.get(rid, 0) + 1
             w = self._replicas[rid]
         try:
@@ -443,19 +487,58 @@ class ReplicaSet:
             with self._lock:
                 self._pending[rid] -= 1
 
+    def forget(self, req_id: int) -> None:
+        """Drop a finished/failed request's sticky chunk-stream pin."""
+        with self._lock:
+            self._sticky.pop(req_id, None)
+
     # -- dynamic scaling ---------------------------------------------------
+    def _warm_seed(self, engine: Any) -> Optional[Dict[str, int]]:
+        """Seed a new engine's prefix index from the warmest sibling.
+
+        Advisory: any failure (engines without snapshot support, pool too
+        small, mid-extract eviction) degrades to a cold start.  The donor
+        snapshot pins its pages only for the duration of the extract, so
+        the sibling keeps serving."""
+        if not (hasattr(engine, "seed_prefixes")
+                and hasattr(engine, "prefix_hint")):
+            return None
+        with self._lock:
+            siblings = [self._replicas[r].engine for r in self._order]
+        donor = None
+        best = 0
+        for eng in siblings:
+            pages = getattr(eng, "cached_prefix_pages", 0)
+            if pages > best and hasattr(eng, "prefix_snapshot"):
+                donor, best = eng, pages
+        if donor is None:
+            return None
+        try:
+            seeded = engine.seed_prefixes(donor.prefix_snapshot())
+        except Exception:                        # advisory: cold start
+            return None
+        if not seeded:
+            return None
+        return {"donor_pages": best, "pages": seeded}
+
     def scale_up(self, engine: Any = None) -> Optional[int]:
         """Add one replica (given engine, or a fresh one from the stage
-        factory); returns its replica id, or None without a source."""
+        factory); returns its replica id, or None without a source.  With
+        ``warm_seed`` the new engine's prefix cache is seeded from the
+        sibling holding the most indexed pages before it joins the routing
+        set, so its first requests already score affinity hits."""
         if engine is None:
             if self.engine_factory is None:
                 return None
             engine = self.engine_factory()       # may be slow: outside lock
+        seed = self._warm_seed(engine) if self.warm_seed else None
         with self._lock:
             rid = next(i for i in range(len(self._replicas) + 1)
                        if i not in self._replicas)
             w = self._install(rid, engine)
             started = self._started
+            if seed is not None:
+                self.seed_events.append({"rid": rid, **seed})
         if started:
             w.start()
         return rid
@@ -486,4 +569,7 @@ class ReplicaSet:
             getattr(w.engine, "busy_time", 0.0))
         with self._lock:
             del self._replicas[rid]
+            # unpin chunk streams that stuck to the retired replica
+            for req_id in [k for k, v in self._sticky.items() if v == rid]:
+                del self._sticky[req_id]
         return rid

@@ -17,8 +17,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.request import StageEvent
-from repro.engine.kv_cache import (PagedKVConfig, hash_embed_blocks,
-                                   hash_token_blocks)
+from repro.engine.kv_cache import (PagedKVConfig, embed_prefix_keys,
+                                   hash_embed_blocks, hash_token_blocks,
+                                   token_prefix_keys)
 from repro.engine.runner import PagedRunner, StateRunner
 from repro.engine.sampling import SamplingParams, sample_tokens
 from repro.engine.scheduler import Scheduler
@@ -58,6 +59,7 @@ class AREngine:
                  stream_chunk: int = 0, collect_hidden: bool = False,
                  default_sampling: Optional[SamplingParams] = None,
                  emit_kv: bool = False, enable_prefix_cache: bool = False,
+                 prefix_index: str = "radix",
                  spec_ngram: Optional[tuple] = None, seed: int = 0):
         self.name = name
         self.cfg = cfg
@@ -81,7 +83,9 @@ class AREngine:
                                                               "hybrid"))
         self.scheduler = Scheduler(self.kv, max_batch, token_budget,
                                    chunk_size,
-                                   enable_prefix_cache=self.enable_prefix_cache)
+                                   enable_prefix_cache=self.enable_prefix_cache,
+                                   prefix_index=prefix_index)
+        self._seed_events = 0           # pages warm-seeded into this replica
         if cfg.arch_type in ("ssm", "hybrid"):
             self.runner: Any = StateRunner(cfg, params, self.kv, max_batch)
             self._paged = False
@@ -130,24 +134,30 @@ class AREngine:
                     [np.asarray(extra["prompt_prepend"], pe.dtype), pe], 0)
         rt.prompt_embeds = pe
         self._rt[req_id] = rt
+        hashes, keys = self._prefix_ids(rt, pe)
         self.scheduler.add(req_id, pe.shape[0], sampling,
-                           block_hashes=self._block_hashes(rt, pe))
+                           block_hashes=hashes, prefix_keys=keys)
 
-    def _block_hashes(self, rt: _ReqRuntime, pe: np.ndarray):
-        """Content-addressed block hashes over the prompt's full pages:
-        token ids when the stage is tokenized and per-request preprocess
-        cannot perturb the prompt; otherwise a bytes digest of the final
-        prompt embeds (covers hidden-state-fed stages and mm prepends)."""
+    def _prefix_ids(self, rt: _ReqRuntime, pe: np.ndarray):
+        """Content-addressed (block hashes, per-token sub-keys) over the
+        prompt: token ids when the stage is tokenized and per-request
+        preprocess cannot perturb the prompt; otherwise bytes digests of
+        the final prompt embeds (covers hidden-state-fed stages and mm
+        prepends).  Hashes cover full pages (tree edges); sub-keys cover
+        every position including the partial tail block, enabling
+        partial-block radix hits."""
         if not (self.enable_prefix_cache and self._paged):
-            return None
+            return None, None
         if rt.prompt_tokens is not None and self.preprocess is None:
-            return hash_token_blocks(rt.prompt_tokens, self.kv.page_size)
-        return hash_embed_blocks(pe, self.kv.page_size)
+            return (hash_token_blocks(rt.prompt_tokens, self.kv.page_size),
+                    token_prefix_keys(rt.prompt_tokens, self.kv.page_size))
+        return (hash_embed_blocks(pe, self.kv.page_size),
+                embed_prefix_keys(pe, self.kv.page_size))
 
     def affinity_hints(self, inputs: Dict[str, Any]):
-        """Router-side hint chain for cache-affinity routing: the block
-        hashes this request WILL carry if routed here.  Must mirror the
-        token path of ``_block_hashes`` exactly — only tokenized stages
+        """Router-side hint for cache-affinity routing: the (block hashes,
+        sub-keys) this request WILL carry if routed here.  Must mirror the
+        token path of ``_prefix_ids`` exactly — only tokenized stages
         without per-request preprocess are hintable (embeds are hashed
         post-preprocess, which the router cannot reproduce).  Returns None
         when no stable hint exists."""
@@ -156,14 +166,22 @@ class AREngine:
                 and "kv_seed" not in inputs and "prompt_embeds" not in inputs
                 and "tokens" in inputs):
             return None
-        return hash_token_blocks(inputs["tokens"], self.kv.page_size)
+        return (hash_token_blocks(inputs["tokens"], self.kv.page_size),
+                token_prefix_keys(inputs["tokens"], self.kv.page_size))
 
-    def prefix_hint(self, block_hashes) -> int:
-        """Blocks of ``block_hashes`` resident in this replica's prefix
-        cache (read-only, cross-thread safe — used by the router)."""
-        if not (self.enable_prefix_cache and self._paged):
+    def prefix_hint(self, hint) -> int:
+        """Matched tokens of ``hint`` (an ``affinity_hints`` result, or a
+        bare hash chain) resident in this replica's radix index — full
+        blocks score page_size tokens each, plus the partial-block match
+        at the divergence.  Read-only, cross-thread safe (the router
+        probes every candidate replica with it)."""
+        if not (self.enable_prefix_cache and self._paged) or hint is None:
             return 0
-        return self.scheduler.prefix_hint(block_hashes)
+        if isinstance(hint, tuple):
+            hashes, keys = hint
+        else:
+            hashes, keys = hint, None
+        return self.scheduler.prefix_hint(hashes, keys)
 
     @property
     def prefix_stats(self) -> Dict[str, int]:
@@ -207,8 +225,74 @@ class AREngine:
             seq = self.scheduler.running[req_id]
             ctx = rt.prompt_tokens + rt.tokens
             self.scheduler.set_hashes(
-                req_id, hash_token_blocks(ctx[:seq.pos], self.kv.page_size))
+                req_id, hash_token_blocks(ctx[:seq.pos], self.kv.page_size),
+                token_prefix_keys(ctx[:seq.pos], self.kv.page_size))
         self.scheduler.release(req_id)
+
+    # ---- warm replica scale-up ---------------------------------------
+    @property
+    def cached_prefix_pages(self) -> int:
+        """Published pages in this replica's index (donor-selection
+        score for warm scale-up)."""
+        if not (self.enable_prefix_cache and self._paged):
+            return 0
+        return self.scheduler.allocator.indexed_pages
+
+    def prefix_snapshot(self, max_pages: int = 64) -> List[Dict[str, Any]]:
+        """Read-only snapshot of this replica's published prefixes for
+        seeding a freshly scaled-up sibling: root-to-leaf radix chains
+        with their KV contents.  The pages are pinned (extra refcount
+        under a negative req-id) while KV is extracted, so the owning
+        engine can keep serving concurrently — indexed pages are
+        KV-complete and never written by running requests, and the pin
+        prevents eviction/reallocation mid-copy."""
+        if not (self.enable_prefix_cache and self._paged):
+            return []
+        alloc = self.scheduler.allocator
+        pin, paths = alloc.snapshot_pin(max_pages)
+        try:
+            out = []
+            for hashes, keys, pages in paths:
+                bt = np.asarray(pages, np.int32)
+                k, v = self.runner.extract_kv(
+                    bt, len(pages) * self.kv.page_size)
+                out.append({"hashes": hashes, "keys": keys, "k": k, "v": v})
+        finally:
+            alloc.release_pin(pin)
+        return out
+
+    def seed_prefixes(self, snapshot: List[Dict[str, Any]]) -> int:
+        """Warm-seed this replica's cache from a sibling's
+        ``prefix_snapshot``: allocate pages, inject the transferred KV,
+        publish the chain, and release — the pages park in the LRU exactly
+        as if a local request had computed them, so affinity routing has
+        somewhere to route from the first request on.  Chains sharing a
+        prefix with already-seeded ones are deduplicated via lookup.
+        Returns the number of pages seeded."""
+        if not (self.enable_prefix_cache and self._paged):
+            return 0
+        alloc = self.scheduler.allocator
+        page = self.kv.page_size
+        seeded = 0
+        for entry in snapshot:
+            hashes, keys = entry["hashes"], entry["keys"]
+            hit = alloc.lookup(hashes)
+            n_new = len(hashes) - len(hit)
+            if n_new <= 0:
+                continue
+            rid = alloc.temp_rid()
+            pages = alloc.allocate(rid, n_new)
+            if pages is None:
+                break                   # pool exhausted: seed what fits
+            lo, hi = len(hit) * page, len(hashes) * page
+            self.runner.inject_kv(np.asarray(entry["k"])[:, lo:hi],
+                                  np.asarray(entry["v"])[:, lo:hi],
+                                  np.asarray(pages, np.int32), hi - lo)
+            alloc.publish(hit + pages, hashes, keys)
+            alloc.free(rid)             # published pages park in the LRU
+            seeded += n_new
+        self._seed_events += seeded
+        return seeded
 
     def _emit_progress(self, req_id: int, events: List[StageEvent],
                        finished: bool) -> None:

@@ -16,7 +16,7 @@ Qwen3-Omni or MiMo-Audio's patch decoder).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 import jax

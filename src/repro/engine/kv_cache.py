@@ -20,20 +20,29 @@ token ids for tokenized stages and a bytes digest of the prompt *embeds*
 for stages fed hidden states (Thinker -> Talker), so every AR stage of an
 any-to-any pipeline can prefix-cache.
 
+The index itself is a radix tree over the hash chain
+(``engine/radix_index.py``): longest-prefix walks, *partial-block* hits
+via per-token sub-keys, leaf-ordered LRU eviction, and snapshot paths a
+sibling replica can warm-seed a scale-up from.  ``index_kind="flat"``
+keeps the PR-6 flat map as the ablation baseline.
+
 SSM stages have no KV: their cache is a constant-size recurrent state per
 slot, managed by ``SlotStateCache`` (DESIGN.md §4 — per-stage cache kind).
 """
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.engine.radix_index import (BlockKey, PartialHit,  # noqa: F401
+                                      make_index)
 
 BlockHash = Tuple[str, bytes]
 
@@ -67,25 +76,60 @@ def hash_embed_blocks(embeds, page_size: int,
     return out
 
 
+def token_prefix_keys(tokens, page_size: int) -> List[BlockKey]:
+    """Per-token sub-keys, one tuple per block *including* the partial
+    tail block: the radix index compares these at the diverging block to
+    find partial-page hits.  For token stages the sub-key of a position is
+    the token id itself — equal sub-keys literally mean equal tokens, so a
+    partial match's copied KV rows are exactly what a fresh prefill would
+    write."""
+    arr = np.asarray(tokens, np.int64)
+    return [tuple(int(t) for t in arr[i:i + page_size])
+            for i in range(0, len(arr), page_size)]
+
+
+def embed_prefix_keys(embeds, page_size: int) -> List[BlockKey]:
+    """Per-row digests for embed-fed stages: two rows with equal digests
+    have byte-identical embeddings, so prefix-matching digests is as sound
+    as matching token ids."""
+    e = np.ascontiguousarray(np.asarray(embeds, np.float32))
+    digests = [hashlib.blake2b(e[i].tobytes(), digest_size=8).digest()
+               for i in range(e.shape[0])]
+    return [tuple(digests[i:i + page_size])
+            for i in range(0, len(digests), page_size)]
+
+
 class PageAllocator:
     """Refcounted page allocator with an optional content-addressed
     prefix cache (``enable_prefix_cache``).  With the cache disabled the
     behavior is exactly the old free-list allocator (no page is ever
-    hashed, so every released page returns straight to the free list)."""
+    indexed, so every released page returns straight to the free list).
 
-    def __init__(self, num_pages: int, enable_prefix_cache: bool = False):
+    The index is a ``RadixIndex`` by default (``index_kind="flat"`` keeps
+    the PR-6 map as the ablation baseline).  Mutators take ``_lock`` so a
+    sibling replica can pin a consistent snapshot cross-thread
+    (``snapshot_pin``/``release_pin``) while the owning engine keeps
+    serving; the read-only ``prefix_hint`` router probe stays lock-free.
+    """
+
+    def __init__(self, num_pages: int, enable_prefix_cache: bool = False,
+                 index_kind: str = "radix", page_size: int = 16):
         self.num_pages = num_pages
         self.enable_prefix_cache = enable_prefix_cache
+        self.page_size = page_size
+        self.index_kind = index_kind
+        self._index = make_index(index_kind)
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         # pages held per request, WITH multiplicity: the total multiplicity
         # of a page across requests equals its refcount
         self._owned: Dict[int, List[int]] = {}
         self._refcount: Dict[int, int] = {}
-        self._hash_to_page: Dict[BlockHash, int] = {}
-        self._page_hash: Dict[int, BlockHash] = {}
-        # cached pages with refcount 0, oldest first (eviction order)
+        # cached pages with refcount 0, oldest first (eviction order);
+        # eviction takes the first *leaf* in this order
         self._lru: "OrderedDict[int, None]" = OrderedDict()
         self.evictions = 0
+        self._lock = threading.RLock()
+        self._pin_rid = -1              # negative req-ids for snapshot pins
 
     @property
     def free_pages(self) -> int:
@@ -106,77 +150,93 @@ class PageAllocator:
     def pages_owned(self, req_id: int) -> List[int]:
         return self._owned.get(req_id, [])
 
+    @property
+    def indexed_pages(self) -> int:
+        return len(self._index)
+
     # -- allocation ---------------------------------------------------------
-    def _evict_one(self) -> None:
-        page, _ = self._lru.popitem(last=False)       # oldest cached page
-        h = self._page_hash.pop(page)
-        del self._hash_to_page[h]
+    def _evict_one(self) -> bool:
+        """Evict the coldest *evictable* cached page: oldest-first in LRU
+        order, skipping interior radix nodes with live descendants.  A
+        skipped interior page becomes evictable once its subtree is gone
+        (children are always parked no earlier than their parents only if
+        acquired together; regardless, removing leaves peels the tree
+        bottom-up so repeated calls make progress)."""
+        page = self._index.pick_evictable(self._lru)
+        if page is None:
+            return False
+        del self._lru[page]
+        self._index.remove(page)
         self._free.append(page)
         self.evictions += 1
+        return True
 
     def allocate(self, req_id: int, n: int) -> Optional[List[int]]:
-        """Allocate ``n`` fresh (private, refcount-1) pages, evicting LRU
+        """Allocate ``n`` fresh (private, refcount-1) pages, evicting
         cached pages as needed.  Referenced pages are never evicted."""
-        if len(self._free) + len(self._lru) < n:
-            return None
-        while len(self._free) < n:
-            self._evict_one()
-        pages = [self._free.pop() for _ in range(n)]
-        for p in pages:
-            self._refcount[p] = 1
-        self._owned.setdefault(req_id, []).extend(pages)
-        return pages
+        with self._lock:
+            if len(self._free) + len(self._lru) < n:
+                return None
+            while len(self._free) < n:
+                if not self._evict_one():
+                    return None       # no evictable leaf (treat as OOM)
+            pages = [self._free.pop() for _ in range(n)]
+            for p in pages:
+                self._refcount[p] = 1
+            self._owned.setdefault(req_id, []).extend(pages)
+            return pages
 
     # -- prefix cache -------------------------------------------------------
-    def lookup(self, hashes: Iterable[BlockHash]) -> List[int]:
-        """Longest cached prefix: pages for the leading run of hashes that
-        are present in the index (no refcounts are taken).  One O(1) dict
-        probe per block — hashes chain, so the scan stops at the first
-        miss and never walks the whole index."""
-        pages: List[int] = []
-        for h in hashes:
-            p = self._hash_to_page.get(h)
-            if p is None:
-                break
-            pages.append(p)
-        return pages
+    def lookup(self, hashes: Sequence[BlockHash]) -> List[int]:
+        """Longest cached full-block prefix (no refcounts taken).  An
+        O(match length) walk down the radix tree — the scan stops at the
+        first miss and never touches the rest of the index."""
+        return self._index.lookup(hashes)
 
-    def prefix_hint(self, hashes: Iterable[BlockHash]) -> int:
-        """Length (in blocks) of the longest indexed prefix of ``hashes``.
-        The cheap read-only probe behind cache-affinity routing: the
-        router calls it cross-thread on every candidate replica, so it
-        must not touch refcounts, the LRU, or any allocator state."""
-        n = 0
-        for h in hashes:
-            if h not in self._hash_to_page:
-                break
-            n += 1
-        return n
+    def match(self, hashes: Sequence[BlockHash],
+              keys: Optional[Sequence[Optional[BlockKey]]] = None,
+              ) -> Tuple[List[int], Optional[PartialHit]]:
+        """Longest cached full-block prefix plus the best partial-block
+        hit ``(page, matched_tokens)`` at the diverging block (None for
+        the flat index)."""
+        return self._index.match(hashes, keys)
+
+    def prefix_hint(self, hashes: Sequence[BlockHash],
+                    keys: Optional[Sequence[Optional[BlockKey]]] = None,
+                    ) -> int:
+        """Matched-token count (full blocks * page_size + partial-block
+        tokens) of the longest indexed prefix of ``hashes``.  The cheap
+        read-only probe behind cache-affinity routing: the router calls it
+        cross-thread on every candidate replica, so it must not touch
+        refcounts, the LRU, or any allocator state."""
+        return self._index.hint(hashes, keys, self.page_size)
 
     def acquire(self, req_id: int, pages: Iterable[int]) -> None:
         """Take a reference on already-resident pages (a prefix hit, or an
         extra share).  Refcount-0 cached pages leave the eviction LRU."""
-        owned = self._owned.setdefault(req_id, [])
-        for p in pages:
-            rc = self._refcount.get(p, 0)
-            if rc == 0:
-                self._lru.pop(p)              # must be a cached page
-            self._refcount[p] = rc + 1
-            owned.append(p)
+        with self._lock:
+            owned = self._owned.setdefault(req_id, [])
+            for p in pages:
+                rc = self._refcount.get(p, 0)
+                if rc == 0:
+                    self._lru.pop(p)          # must be a cached page
+                self._refcount[p] = rc + 1
+                owned.append(p)
 
-    def publish(self, pages: Iterable[int],
-                hashes: Iterable[BlockHash]) -> None:
-        """Register content hashes for full, KV-complete pages so future
-        requests can reuse them.  First writer wins: a hash already in the
-        index keeps its existing page (the duplicate page stays unhashed
-        and returns to the free list on release)."""
+    def publish(self, pages: Sequence[int], hashes: Sequence[BlockHash],
+                keys: Optional[Sequence[Optional[BlockKey]]] = None,
+                ) -> None:
+        """Insert the chain of full, KV-complete pages into the index so
+        future requests can reuse them.  Chains are root-anchored (the
+        caller passes the *whole* prefix from block 0, not a suffix).
+        First writer wins per block: an existing node keeps its page (the
+        duplicate page stays unindexed and returns to the free list on
+        release).  ``keys`` carries per-token sub-keys enabling partial
+        hits against these blocks."""
         if not self.enable_prefix_cache:
             return
-        for p, h in zip(pages, hashes):
-            if h in self._hash_to_page or p in self._page_hash:
-                continue
-            self._hash_to_page[h] = p
-            self._page_hash[p] = h
+        with self._lock:
+            self._index.insert(hashes, pages, keys)
 
     def cow(self, req_id: int, page: int) -> Optional[int]:
         """Copy-on-write: give ``req_id`` a private writable page standing
@@ -188,6 +248,37 @@ class PageAllocator:
         got = self.allocate(req_id, 1)
         return got[0] if got else None
 
+    # -- snapshot (warm replica scale-up) -----------------------------------
+    def temp_rid(self) -> int:
+        """A fresh negative req-id for internal holds (snapshot pins,
+        warm-seed injections) — real requests are non-negative, so these
+        can never collide."""
+        with self._lock:
+            rid = self._pin_rid
+            self._pin_rid -= 1
+            return rid
+
+    def snapshot_pin(self, max_pages: int = 0):
+        """Pin a consistent read-only snapshot of the published prefixes:
+        returns ``(pin_id, paths)`` where paths are root-to-leaf
+        ``(hashes, keys, pages)`` chains and every covered page holds an
+        extra reference under ``pin_id`` (a negative req-id, so it can
+        never collide with real requests).  The caller extracts KV from
+        the pinned pages *outside* the lock — pinned pages cannot be
+        evicted or reallocated, and indexed pages are KV-complete so no
+        running request writes into them — then calls ``release_pin``."""
+        with self._lock:
+            paths = self._index.paths(max_pages)
+            pin = self.temp_rid()
+            seen = set()
+            pages = [p for _, _, pp in paths for p in pp
+                     if not (p in seen or seen.add(p))]
+            self.acquire(pin, pages)
+            return pin, paths
+
+    def release_pin(self, pin_id: int) -> None:
+        self.free(pin_id)
+
     # -- release ------------------------------------------------------------
     def _decref(self, page: int) -> None:
         rc = self._refcount[page] - 1
@@ -195,7 +286,7 @@ class PageAllocator:
             self._refcount[page] = rc
             return
         del self._refcount[page]
-        if page in self._page_hash:
+        if self._index.has_page(page):
             self._lru[page] = None            # park: reusable via its hash
             self._lru.move_to_end(page)
         else:
@@ -204,39 +295,43 @@ class PageAllocator:
     def free(self, req_id: int) -> None:
         """Drop every reference ``req_id`` holds.  Shared pages survive for
         their other holders; cached pages park in the LRU."""
-        for p in self._owned.pop(req_id, []):
-            self._decref(p)
+        with self._lock:
+            for p in self._owned.pop(req_id, []):
+                self._decref(p)
 
     def check_invariant(self) -> bool:
-        ref_pages = set(self._refcount)
-        free_set = set(self._free)
-        lru_set = set(self._lru)
-        # free / cached / referenced partition the pool
-        ok = (len(self._free) == len(free_set)
-              and not (free_set & lru_set)
-              and not (free_set & ref_pages)
-              and not (lru_set & ref_pages)
-              and len(free_set) + len(lru_set) + len(ref_pages)
-              == self.num_pages)
-        # refcount conservation: refcount == ownership multiplicity >= 1
-        mult: Dict[int, int] = {}
-        for pages in self._owned.values():
-            for p in pages:
-                mult[p] = mult.get(p, 0) + 1
-        ok = ok and mult == self._refcount
-        # hash index is a bijection; hashed pages are never on the free list
-        ok = ok and len(self._hash_to_page) == len(self._page_hash)
-        ok = ok and all(self._hash_to_page.get(h) == p
-                        for p, h in self._page_hash.items())
-        ok = ok and not (set(self._page_hash) & free_set)
-        # index and page states agree: every indexed page is resident —
-        # either parked in the LRU (cached) or held by a request
-        # (referenced); a page the index points at but neither state owns
-        # would be silently resurrectable garbage
-        ok = ok and set(self._page_hash) <= (lru_set | ref_pages)
-        # every refcount-0 cached page is re-acquirable by hash
-        ok = ok and lru_set <= set(self._page_hash)
-        return ok
+        with self._lock:
+            ref_pages = set(self._refcount)
+            free_set = set(self._free)
+            lru_set = set(self._lru)
+            idx_pages = set(self._index.pages())
+            # free / cached / referenced partition the pool
+            ok = (len(self._free) == len(free_set)
+                  and not (free_set & lru_set)
+                  and not (free_set & ref_pages)
+                  and not (lru_set & ref_pages)
+                  and len(free_set) + len(lru_set) + len(ref_pages)
+                  == self.num_pages)
+            # refcount conservation: refcount == ownership multiplicity >= 1
+            mult: Dict[int, int] = {}
+            for pages in self._owned.values():
+                for p in pages:
+                    mult[p] = mult.get(p, 0) + 1
+            ok = ok and mult == self._refcount
+            # index structure: hash/page bijection, parent/child link
+            # consistency, every node reachable from the root (radix:
+            # prefix closure — an indexed block implies its whole chain)
+            ok = ok and self._index.check()
+            # tree shape and page states agree: every indexed page is
+            # resident — parked in the LRU (cached) or held by a request
+            # (referenced); never on the free list.  A page the index
+            # points at but neither state owns would be silently
+            # resurrectable garbage
+            ok = ok and not (idx_pages & free_set)
+            ok = ok and idx_pages <= (lru_set | ref_pages)
+            # every refcount-0 cached page is re-acquirable by hash
+            ok = ok and lru_set <= idx_pages
+            return ok
 
 
 @dataclass

@@ -17,7 +17,6 @@ can forward them downstream (e.g. Thinker hidden states → Talker).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -132,18 +131,24 @@ class PagedRunner:
         return logits, hidden
 
     # ---- prefix cache: copy-on-write page copies -------------------------
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=(1, 2))
+    def _copy_pages_jit(self, k_pages, v_pages, src, dst):
+        return (k_pages.at[:, dst].set(k_pages[:, src]),
+                v_pages.at[:, dst].set(v_pages[:, src]))
+
     def copy_pages(self, src_pages, dst_pages) -> None:
         """Copy whole KV pages across all layers (copy-on-write: a request
-        extending a shared cached page gets a private copy first)."""
+        extending a shared cached page gets a private copy first).  One
+        jitted donated call per pool pair — the update happens in place
+        instead of materializing a full pool copy per eager ``.at.set``
+        (this runs at admission, so it is on the TTFT path)."""
         src = jnp.asarray(np.asarray(src_pages, np.int32))
         dst = jnp.asarray(np.asarray(dst_pages, np.int32))
-        self.k_pages = self.k_pages.at[:, dst].set(self.k_pages[:, src])
-        self.v_pages = self.v_pages.at[:, dst].set(self.v_pages[:, src])
+        self.k_pages, self.v_pages = self._copy_pages_jit(
+            self.k_pages, self.v_pages, src, dst)
         if self.quant:
-            self.k_scales = self.k_scales.at[:, dst].set(
-                self.k_scales[:, src])
-            self.v_scales = self.v_scales.at[:, dst].set(
-                self.v_scales[:, src])
+            self.k_scales, self.v_scales = self._copy_pages_jit(
+                self.k_scales, self.v_scales, src, dst)
 
     # ---- PD disaggregation: KV extraction / injection -------------------
     def extract_kv(self, block_table, n_tokens: int):

@@ -21,10 +21,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
-import numpy as np
-
-from repro.engine.kv_cache import (BlockHash, BlockTableStore, PageAllocator,
-                                   PagedKVConfig, pages_for)
+from repro.engine.kv_cache import (BlockHash, BlockKey, BlockTableStore,
+                                   PageAllocator, PagedKVConfig, pages_for)
 from repro.engine.sampling import SamplingParams
 
 
@@ -40,6 +38,9 @@ class SeqState:
     finished: bool = False
     resumed: bool = False              # re-prefilling after preemption
     block_hashes: List[BlockHash] = field(default_factory=list)
+    # per-token sub-keys per block (incl. the partial tail block) — the
+    # radix index compares these at the diverging block for partial hits
+    prefix_keys: List[BlockKey] = field(default_factory=list)
     cached_tokens: int = 0             # prompt tokens served from the cache
 
     @property
@@ -74,35 +75,50 @@ class Scheduler:
     def __init__(self, kv: PagedKVConfig, max_batch: int,
                  token_budget: int = 256, chunk_size: int = 64,
                  enable_preemption: bool = False,
-                 enable_prefix_cache: bool = False):
+                 enable_prefix_cache: bool = False,
+                 prefix_index: str = "radix",
+                 min_partial_tokens: int = 1):
         self.kv = kv
         self.max_batch = max_batch
         self.token_budget = token_budget
         self.chunk_size = chunk_size
         self.enable_preemption = enable_preemption
         self.enable_prefix_cache = enable_prefix_cache
+        self.min_partial_tokens = min_partial_tokens
         self.allocator = PageAllocator(
-            kv.num_pages, enable_prefix_cache=enable_prefix_cache)
+            kv.num_pages, enable_prefix_cache=enable_prefix_cache,
+            index_kind=prefix_index, page_size=kv.page_size)
         self.tables = BlockTableStore(kv)
         self.waiting: Deque[SeqState] = deque()
         self.running: Dict[int, SeqState] = {}
         self._free_slots = list(range(max_batch - 1, -1, -1))
         self.preemptions = 0
-        # per-stage prefix-cache hit accounting (surfaced by the engine)
+        # per-stage prefix-cache hit accounting (surfaced by the engine).
+        # cached_tokens = full_block_tokens + partial_tokens; partial
+        # tokens are served through a copy-on-write page (a partial-block
+        # radix hit, or the final page of a fully-cached aligned prompt)
         self.prefix_stats = {"lookups": 0, "hits": 0,
-                             "cached_tokens": 0, "computed_tokens": 0}
+                             "cached_tokens": 0, "computed_tokens": 0,
+                             "full_block_tokens": 0, "partial_tokens": 0,
+                             "partial_hits": 0}
 
     # ------------------------------------------------------------------
     def add(self, req_id: int, prompt_len: int, sampling: SamplingParams,
-            block_hashes: Optional[List[BlockHash]] = None) -> None:
+            block_hashes: Optional[List[BlockHash]] = None,
+            prefix_keys: Optional[List[BlockKey]] = None) -> None:
         self.waiting.append(SeqState(req_id, prompt_len, sampling,
-                                     block_hashes=block_hashes or []))
+                                     block_hashes=block_hashes or [],
+                                     prefix_keys=prefix_keys or []))
 
-    def set_hashes(self, req_id: int, hashes: List[BlockHash]) -> None:
+    def set_hashes(self, req_id: int, hashes: List[BlockHash],
+                   keys: Optional[List[BlockKey]] = None) -> None:
         """Replace a running request's block-hash chain (the engine extends
         it over generated tokens just before release, so whole finished
         contexts become matchable by later multi-turn requests)."""
-        self.running[req_id].block_hashes = hashes
+        seq = self.running[req_id]
+        seq.block_hashes = hashes
+        if keys is not None:
+            seq.prefix_keys = keys
 
     def add_prefilled(self, req_id: int, prompt_len: int,
                       sampling: SamplingParams) -> None:
@@ -125,61 +141,83 @@ class Scheduler:
         return min(pages_for(tokens, self.kv.page_size),
                    self.kv.max_pages_per_seq)
 
-    def prefix_hint(self, block_hashes: Optional[List[BlockHash]]) -> int:
-        """Cache-affinity probe: blocks of ``block_hashes`` resident in
-        this replica's page index.  Read-only and cross-thread safe (one
-        dict probe per block) — the router scores replicas with it."""
+    def prefix_hint(self, block_hashes: Optional[List[BlockHash]],
+                    prefix_keys: Optional[List[BlockKey]] = None) -> int:
+        """Cache-affinity probe: matched *tokens* of ``block_hashes`` (+
+        partial-block sub-keys) resident in this replica's radix index.
+        Read-only and cross-thread safe — the router scores replicas with
+        it."""
         if not (self.enable_prefix_cache and block_hashes):
             return 0
-        return self.allocator.prefix_hint(block_hashes)
+        return self.allocator.prefix_hint(block_hashes, prefix_keys)
 
     def _match_prefix(self, seq: SeqState, total: int):
-        """Longest cached prefix usable by ``seq``: (pages, cow_src).
+        """Longest cached prefix usable by ``seq``: (pages, cow).
 
-        Only full pages strictly before the last prompt token are reused
-        as-is (at least one token must be computed to produce logits).  If
-        the whole page-aligned prompt is cached, the final page is still
-        reused — via a copy-on-write private copy into which only the last
-        prompt token is recomputed."""
+        Full pages strictly before the last prompt token are reused as-is.
+        ``cow`` is ``None`` or ``(src_page, m)``: the next block partially
+        matches a cached page for m leading tokens, which the engine
+        materializes by copying src into a private page and recomputing
+        only positions >= m.  Two cases collapse into one mechanism:
+
+          - radix partial-block hit: the diverging block shares its first
+            m tokens with a cached sibling block (m < page, or m < the
+            request's tail length for the final block);
+          - fully-cached page-aligned prompt: every block matched, but at
+            least one token must be recomputed to produce logits, so the
+            final page is reused via CoW with m = page - 1.
+
+        Both clamp m so cached_tokens <= prompt_len - 1."""
         page = self.kv.page_size
-        matched = self.allocator.lookup(seq.block_hashes)
+        matched, partial = self.allocator.match(seq.block_hashes,
+                                                seq.prefix_keys)
         k_full = min((seq.prompt_len - 1) // page, total - 1)
-        cow_src = None
-        if (len(matched) > k_full and (k_full + 1) * page == seq.prompt_len
-                and k_full == (seq.prompt_len - 1) // page):
-            cow_src = matched[k_full]
-        return matched[:k_full], cow_src
+        cow = None
+        if len(matched) > k_full:
+            # fully-cached aligned prompt: recompute only the last token
+            cow = (matched[k_full], page - 1)
+        elif partial is not None:
+            j = len(matched)
+            m = min(partial[1], seq.prompt_len - 1 - j * page)
+            if m >= self.min_partial_tokens:
+                cow = (partial[0], m)
+        return matched[:k_full], cow
 
     def _admit_one(self, seq: SeqState, plan: StepPlan) -> bool:
         page = self.kv.page_size
         total = self._admission_pages(seq)
         cached: List[int] = []
-        cow_src = None
+        cow = None
         looked_up = (self.enable_prefix_cache and seq.block_hashes
                      and seq.prefill_done == 0)
         if looked_up:
-            cached, cow_src = self._match_prefix(seq, total)
+            cached, cow = self._match_prefix(seq, total)
             self.prefix_stats["lookups"] += 1
         # take refs on the hit pages (and pin the CoW source so it cannot
         # be evicted before the engine copies it) BEFORE allocating fresh
         # pages: allocation may evict refcount-0 cached pages
-        pins = cached + ([cow_src] if cow_src is not None else [])
+        pins = cached + ([cow[0]] if cow is not None else [])
         self.allocator.acquire(seq.req_id, pins)
         fresh = self.allocator.allocate(seq.req_id, total - len(cached))
         if fresh is None:
             self.allocator.free(seq.req_id)    # roll back the acquisitions
             return False                       # FIFO: head waits, no skips
-        if cow_src is not None:
-            plan.cow_pairs.append((cow_src, fresh[0]))
-            seq.cached_tokens = (len(cached) + 1) * page - 1
-        else:
-            seq.cached_tokens = len(cached) * page
+        full_tokens = len(cached) * page
+        part_tokens = 0
+        if cow is not None:
+            plan.cow_pairs.append((cow[0], fresh[0]))
+            part_tokens = cow[1]
+        seq.cached_tokens = full_tokens + part_tokens
         if seq.cached_tokens:
             self.prefix_stats["hits"] += 1
             seq.prefill_done = seq.cached_tokens
             seq.pos = seq.cached_tokens
+        if part_tokens:
+            self.prefix_stats["partial_hits"] += 1
         if looked_up:
             self.prefix_stats["cached_tokens"] += seq.cached_tokens
+            self.prefix_stats["full_block_tokens"] += full_tokens
+            self.prefix_stats["partial_tokens"] += part_tokens
             self.prefix_stats["computed_tokens"] += (seq.prompt_len
                                                      - seq.cached_tokens)
         seq.slot = self._free_slots.pop()
@@ -209,7 +247,8 @@ class Scheduler:
                          victim.pos // self.kv.page_size)
             table = self.tables.tables.get(rid, [])
             self.allocator.publish(table[:n_full],
-                                   victim.block_hashes[:n_full])
+                                   victim.block_hashes[:n_full],
+                                   victim.prefix_keys[:n_full] or None)
         self.allocator.free(rid)
         self.tables.drop(rid)
         self._free_slots.append(victim.slot)
@@ -306,7 +345,8 @@ class Scheduler:
                          seq.pos // self.kv.page_size)
             table = self.tables.tables.get(req_id, [])
             self.allocator.publish(table[:n_full],
-                                   seq.block_hashes[:n_full])
+                                   seq.block_hashes[:n_full],
+                                   seq.prefix_keys[:n_full] or None)
         self.allocator.free(req_id)
         self.tables.drop(req_id)
         self._free_slots.append(seq.slot)

@@ -22,7 +22,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, ModelConfig,

@@ -255,10 +255,12 @@ def main() -> None:
                   f"{len(scaler.actions)} action(s)")
             for a in scaler.actions:
                 src = f" from {a['donor']}" if "donor" in a else ""
+                seed = (f" warm-seeded {a['warm_seed']['pages']} pages"
+                        if "warm_seed" in a else "")
                 print(f"  {a['kind']} -> {a['stage']}{src} "
                       f"(pressure={a['pressure']:.2f} "
                       f"busy={a['busy']:.2f} backlog={a['backlog']:.0f}) "
-                      f"replicas={a['replicas']}")
+                      f"replicas={a['replicas']}{seed}")
     else:
         print("stage busy:", {k: round(v, 3)
                               for k, v in orch.stage_busy_times().items()})
@@ -266,16 +268,18 @@ def main() -> None:
         print(f"connector[{kind}]: {st.calls} transfers, {st.bytes} bytes, "
               f"{st.wall_time*1e3:.2f} ms wall")
     for name in graph.stages:
-        ps = {"lookups": 0, "hits": 0, "cached_tokens": 0,
-              "computed_tokens": 0}
+        ps: dict = {}
         for eng in orch.stage_replicas[name]:       # summed over replicas
             for k, v in (getattr(eng, "prefix_stats", None) or {}).items():
-                ps[k] += v
-        if ps["lookups"]:
+                ps[k] = ps.get(k, 0) + v
+        if ps.get("lookups"):
             tot = ps["cached_tokens"] + ps["computed_tokens"]
             rate = 100.0 * ps["cached_tokens"] / tot if tot else 0.0
             print(f"prefix-cache[{name}]: hits={ps['hits']}/"
                   f"{ps['lookups']} cached={ps['cached_tokens']} "
+                  f"(full-block {ps.get('full_block_tokens', 0)} + "
+                  f"partial {ps.get('partial_tokens', 0)} in "
+                  f"{ps.get('partial_hits', 0)} partial hits) "
                   f"computed={ps['computed_tokens']} tokens "
                   f"(hit-rate {rate:.1f}%)")
 

@@ -14,8 +14,6 @@ between groups (weight sharing preserved; per-application-site KV caches).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

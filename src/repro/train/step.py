@@ -1,8 +1,6 @@
 """Train step: next-token cross-entropy (+ MoE aux loss) with AdamW."""
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -164,9 +164,11 @@ def _allocator_walk(seed: int, num_pages: int, steps: int) -> None:
                 continue
             if hit and r.random() < 0.5:       # CoW the last shared page
                 a.cow(rid, hit[-1])
-            # publish the fresh pages under the next chain hashes
+            # publish the whole root-anchored chain (prefix nodes already
+            # exist and keep their pages; the fresh suffix attaches deeper)
             n_pub = min(len(got), max(0, len(hashes) - len(hit)))
-            a.publish(got[:n_pub], hashes[len(hit):len(hit) + n_pub])
+            n_chain = len(hit) + n_pub
+            a.publish(hit + got[:n_pub], hashes[:n_chain])
             live[rid] = True
         elif op < 0.8:                         # release a random request
             rid = r.choice(list(live))
@@ -339,7 +341,8 @@ def test_preempt_publishes_pages_for_reacquisition():
     assert plan.preempted == [1]
     # all 6 KV-complete pages were published, not dropped on the floor
     assert sched.allocator.cached_pages == 6
-    assert sched.prefix_hint(_hashes(toks)) == 6
+    # prefix_hint scores matched TOKENS (radix: partial blocks count too)
+    assert sched.prefix_hint(_hashes(toks)) == 6 * PAGE
     assert sched.allocator.check_invariant()
     # finish 0 so its pages free up (unhashed: straight to the free list)
     sched.note_decode_written(0)

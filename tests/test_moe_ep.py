@@ -7,8 +7,6 @@ import os
 import subprocess
 import sys
 
-import pytest
-
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

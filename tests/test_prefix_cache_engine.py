@@ -82,8 +82,12 @@ def test_token_stage_cached_suffix_matches_full_prefill(lm):
     for i, p in enumerate(prompts):
         assert got_on[i] == _greedy_reference(cfg, params, p, 6)
     st = on.prefix_stats
-    # requests 2 and 3 hit the 2 full shared pages (16 of 20 tokens)
-    assert st["hits"] == 2 and st["cached_tokens"] == 32
+    # requests 2 and 3 hit the 2 full shared pages (16 of 20 tokens) AND
+    # the 4 non-page-aligned shared tokens of block 2 via a partial-block
+    # radix hit (CoW copy of the sibling page + recompute from token 20)
+    assert st["hits"] == 2 and st["cached_tokens"] == 40
+    assert st["full_block_tokens"] == 32
+    assert st["partial_tokens"] == 8 and st["partial_hits"] == 2
     assert off.prefix_stats["lookups"] == 0
     assert off.prefix_stats["hits"] == 0
 
@@ -100,6 +104,9 @@ def test_fully_cached_prompt_uses_cow(lm):
     # private copy-on-write page (a full hit would skip the logits)
     assert on.prefix_stats["cached_tokens"] == 23
     assert on.prefix_stats["computed_tokens"] == 24 + 1
+    # split: 2 whole reused pages + 7 CoW-served tokens of the final page
+    assert on.prefix_stats["full_block_tokens"] == 16
+    assert on.prefix_stats["partial_tokens"] == 7
 
 
 def test_embed_fed_stage_prefix_hits(lm):
@@ -169,6 +176,34 @@ def test_ssm_engine_rejects_prefix_cache_and_masks_inactive_slots():
             break
     assert results[0] == _greedy_reference(cfg, params, pa, 8)
     assert results[1] == _greedy_reference(cfg, params, pb, 8)
+
+
+def test_warm_seeded_engine_hits_and_matches(lm):
+    """Warm replica scale-up, engine level: a fresh engine seeded from a
+    sibling's ``prefix_snapshot`` answers an affinity probe before its
+    first request, hits the seeded pages (full + partial blocks), and its
+    greedy output is byte-identical to the donor's — the injected KV is
+    exactly what a local prefill would have computed."""
+    cfg, params = lm
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, 256, 21).astype(np.int32)   # non-aligned
+    sp = SamplingParams(max_new_tokens=6, temperature=0.0)
+    donor = _engine(cfg, params, enable_prefix_cache=True,
+                    default_sampling=sp)
+    want = _run_sequential(donor, [{"tokens": prompt}])[0]
+    snap = donor.prefix_snapshot()
+    assert snap and donor.scheduler.allocator.check_invariant()
+    fresh = _engine(cfg, params, enable_prefix_cache=True,
+                    default_sampling=sp)
+    assert fresh.seed_prefixes(snap) > 0
+    assert fresh.scheduler.allocator.check_invariant()
+    # the affinity probe scores the seeded prefix before any request ran
+    assert fresh.prefix_hint(fresh.affinity_hints({"tokens": prompt})) > 0
+    got = _run_sequential(fresh, [{"tokens": prompt}])[0]
+    assert got == want
+    st = fresh.prefix_stats
+    assert st["hits"] == 1 and st["cached_tokens"] >= 16
+    assert fresh.scheduler.allocator.check_invariant()
 
 
 def test_preempted_request_reacquires_published_prefix(lm):

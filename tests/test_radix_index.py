@@ -1,0 +1,249 @@
+"""RadixIndex unit tests + the differential property: on any trace of
+publish/lookup/acquire/free operations the radix index returns exactly the
+flat map's full-block hits — partial-block hits only ever ADD matched
+tokens on top.  Pure python (no jax), fast tier."""
+import numpy as np
+import pytest
+
+from repro.engine.kv_cache import (PageAllocator, hash_token_blocks,
+                                   token_prefix_keys)
+from repro.engine.radix_index import FlatIndex, RadixIndex, make_index
+
+PAGE = 4
+
+
+def _chain(tokens):
+    toks = np.asarray(tokens, np.int64)
+    return (hash_token_blocks(toks, PAGE), token_prefix_keys(toks, PAGE))
+
+
+def _shared_prefix_seqs(rng, n=12, base_len=24):
+    """Token sequences with heavy shared prefixes and non-aligned cuts."""
+    base = rng.integers(0, 50, size=base_len).astype(np.int64)
+    out = []
+    for _ in range(n):
+        cut = int(rng.integers(0, base_len + 1))
+        ext = rng.integers(0, 50, size=int(rng.integers(1, 20)))
+        out.append(np.concatenate([base[:cut], ext.astype(np.int64)]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RadixIndex units
+# ---------------------------------------------------------------------------
+
+def test_insert_lookup_roundtrip_and_prefix_walk():
+    idx = RadixIndex()
+    toks = np.arange(12)                       # 3 full blocks
+    hashes, keys = _chain(toks)
+    assert idx.insert(hashes, [7, 8, 9], keys) == 3
+    assert idx.lookup(hashes) == [7, 8, 9]
+    assert idx.lookup(hashes[:2]) == [7, 8]
+    # a foreign chain shares nothing with the root
+    other, _ = _chain(np.arange(100, 112))
+    assert idx.lookup(other) == []
+    # re-insert is idempotent (first writer wins, duplicate pages ignored)
+    assert idx.insert(hashes, [1, 2, 3], keys) == 0
+    assert idx.lookup(hashes) == [7, 8, 9]
+    assert idx.check() and len(idx) == 3
+
+
+def test_partial_hit_at_diverging_block():
+    idx = RadixIndex()
+    a = np.arange(8)                           # blocks [0..3], [4..7]
+    ha, ka = _chain(a)
+    idx.insert(ha, [0, 1], ka)
+    # b shares block 0 and the first 2 tokens of block 1, then diverges
+    b = np.array([0, 1, 2, 3, 4, 5, 99, 98])
+    hb, kb = _chain(b)
+    full, partial = idx.match(hb, kb)
+    assert full == [0]
+    assert partial == (1, 2), "first 2 tokens of the sibling page match"
+    # hint scores full blocks in tokens plus the partial tail
+    assert idx.hint(hb, kb, PAGE) == PAGE + 2
+    # a fully diverging block yields no partial
+    c = np.array([0, 1, 2, 3, 90, 91, 92, 93])
+    hc, kc = _chain(c)
+    full, partial = idx.match(hc, kc)
+    assert full == [0] and partial is None
+
+
+def test_partial_prefers_longest_match_then_smallest_page():
+    idx = RadixIndex()
+    shared = np.array([0, 1, 2, 3])
+    for page, tail in ((5, [10, 11, 12, 13]), (3, [10, 11, 70, 71]),
+                      (9, [10, 11, 12, 60])):
+        h, k = _chain(np.concatenate([shared, tail]))
+        idx.insert(h, [0, page], k)
+    # request matches 3 leading tokens of two children (pages 5 and 9):
+    # the tie breaks to the smallest page id, not insertion order
+    req = np.concatenate([shared, [10, 11, 12, 99]])
+    hr, kr = _chain(req)
+    assert idx.match(hr, kr) == ([0], (5, 3))
+
+
+def test_leaf_ordered_eviction_peels_bottom_up():
+    idx = RadixIndex()
+    hashes, keys = _chain(np.arange(12))
+    idx.insert(hashes, [0, 1, 2], keys)
+    lru = [0, 1, 2]                  # parent is coldest, but not a leaf
+    assert idx.pick_evictable(lru) == 2
+    idx.remove(2)
+    assert idx.pick_evictable(lru[:2]) == 1
+    idx.remove(1)
+    assert idx.pick_evictable([0]) == 0
+    idx.remove(0)
+    assert len(idx) == 0 and idx.check()
+
+
+def test_remove_interior_node_asserts():
+    idx = RadixIndex()
+    hashes, keys = _chain(np.arange(8))
+    idx.insert(hashes, [0, 1], keys)
+    with pytest.raises(AssertionError, match="interior"):
+        idx.remove(0)
+
+
+def test_paths_dedup_and_page_budget():
+    idx = RadixIndex()
+    shared = np.arange(8)
+    a = np.concatenate([shared, [90, 91, 92, 93]])
+    b = np.concatenate([shared, [80, 81, 82, 83]])
+    ha, ka = _chain(a)
+    hb, kb = _chain(b)
+    idx.insert(ha, [0, 1, 2], ka)
+    idx.insert(hb, [0, 1, 3], kb)
+    paths = idx.paths()
+    assert len(paths) == 2
+    assert all(len(p[0]) == len(p[1]) == len(p[2]) == 3 for p in paths)
+    assert {tuple(p[2]) for p in paths} == {(0, 1, 2), (0, 1, 3)}
+    # deepest-first greedy truncation by DISTINCT page budget: the first
+    # 3-page path covers 3 pages, so a budget of 3 keeps exactly one
+    assert len(idx.paths(max_pages=3)) == 1
+
+
+def test_make_index_kinds():
+    assert isinstance(make_index("radix"), RadixIndex)
+    assert isinstance(make_index("flat"), FlatIndex)
+    with pytest.raises(ValueError, match="unknown prefix index"):
+        make_index("btree")
+
+
+# ---------------------------------------------------------------------------
+# differential property: radix == flat on full blocks, partial only adds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_differential_index_random_traces(seed):
+    rng = np.random.default_rng(seed)
+    radix, flat = RadixIndex(), FlatIndex()
+    next_page = 0
+    for seq in _shared_prefix_seqs(rng, n=10):
+        hashes, keys = _chain(seq)
+        pages = []
+        for h in hashes:                 # same page for same hash, always
+            node = radix._by_hash.get(h)
+            pages.append(node.page if node else next_page)
+            if node is None:
+                next_page += 1
+        assert radix.insert(hashes, pages, keys) == \
+            flat.insert(hashes, pages, keys)
+        assert radix.check() and flat.check()
+    assert set(radix.pages()) == set(flat.pages())
+    for probe in _shared_prefix_seqs(rng, n=20):
+        hashes, keys = _chain(probe)
+        full_r, partial = radix.match(hashes, keys)
+        full_f, none = flat.match(hashes, keys)
+        assert full_r == full_f, "full-block hits must be identical"
+        assert none is None
+        # partial hits only ADD tokens past the full match, never replace
+        hint_f = flat.hint(hashes, keys, PAGE)
+        hint_r = radix.hint(hashes, keys, PAGE)
+        assert hint_f == len(full_f) * PAGE
+        if partial is None:
+            assert hint_r == hint_f
+        else:
+            page, m = partial
+            assert 0 < m <= PAGE
+            assert page not in full_r
+            assert hint_r == hint_f + m
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_differential_allocator_walk(seed):
+    """Random publish/lookup/acquire/free walk on two allocators (radix vs
+    flat index) with a pool large enough to avoid eviction: allocation and
+    hit behavior must be bit-identical on full blocks."""
+    rng = np.random.default_rng(100 + seed)
+    allocs = {k: PageAllocator(256, enable_prefix_cache=True, index_kind=k,
+                               page_size=PAGE) for k in ("radix", "flat")}
+    seqs = _shared_prefix_seqs(rng, n=16)
+    held = []
+    for step in range(80):
+        op = rng.integers(0, 3)
+        seq = seqs[int(rng.integers(0, len(seqs)))]
+        hashes, keys = _chain(seq)
+        if op == 0:                          # admit + publish a chain
+            rid = 1000 + step
+            pages = {}
+            for k, a in allocs.items():
+                hit = a.lookup(hashes)
+                a.acquire(rid, hit)
+                fresh = a.allocate(rid, len(hashes) - len(hit))
+                assert fresh is not None
+                pages[k] = hit + fresh
+                a.publish(pages[k], hashes, keys)
+            assert pages["radix"] == pages["flat"]
+            held.append(rid)
+        elif op == 1 and held:               # release a random holder
+            rid = held.pop(int(rng.integers(0, len(held))))
+            for a in allocs.values():
+                a.free(rid)
+        else:                                # probe
+            full = {k: a.lookup(hashes) for k, a in allocs.items()}
+            assert full["radix"] == full["flat"]
+            hr = allocs["radix"].prefix_hint(hashes, keys)
+            hf = allocs["flat"].prefix_hint(hashes, keys)
+            assert hf == len(full["flat"]) * PAGE
+            assert hr >= hf, "radix may only ADD partial-hit tokens"
+            assert hr - hf < PAGE
+        for a in allocs.values():
+            assert a.check_invariant()
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_radix_allocator_invariants_under_eviction_pressure(seed):
+    """Small pool, heavy churn: leaf-ordered eviction keeps the tree
+    prefix-closed and the allocator invariant (partition, refcounts, tree
+    shape subset of LRU union referenced) at every step."""
+    rng = np.random.default_rng(200 + seed)
+    a = PageAllocator(12, enable_prefix_cache=True, index_kind="radix",
+                      page_size=PAGE)
+    seqs = _shared_prefix_seqs(rng, n=8, base_len=12)
+    held = []
+    for step in range(120):
+        op = rng.integers(0, 4)
+        seq = seqs[int(rng.integers(0, len(seqs)))]
+        hashes, keys = _chain(seq)
+        if op <= 1:
+            rid = 1000 + step
+            hit = a.lookup(hashes)
+            a.acquire(rid, hit)
+            fresh = a.allocate(rid, len(hashes) - len(hit))
+            if fresh is None:                # pool exhausted: roll back
+                a.free(rid)
+            else:
+                a.publish(hit + fresh, hashes, keys)
+                held.append(rid)
+        elif op == 2 and held:
+            a.free(held.pop(int(rng.integers(0, len(held)))))
+        else:                                # raw allocation pressure
+            rid = -1000 - step               # plain private pages
+            got = a.allocate(rid, int(rng.integers(1, 4)))
+            if got is not None:
+                a.free(rid)
+        assert a.check_invariant(), f"invariant broke at step {step}"
+        # prefix closure: any indexed chain is hit contiguously from root
+        full = a.lookup(hashes)
+        assert len(full) <= len(hashes)
+    assert a.evictions > 0, "walk must exercise eviction"

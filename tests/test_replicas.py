@@ -223,6 +223,93 @@ def test_sync_backend_rejects_multi_replica():
 
 
 # ---------------------------------------------------------------------------
+# warm-seeded scale_up + sticky chunk-stream routing
+# ---------------------------------------------------------------------------
+
+class SeedableEngine(StubEngine):
+    """Stub exposing the engine-side warm-seed protocol surface
+    (cached_prefix_pages / prefix_snapshot / seed_prefixes / prefix_hint)."""
+
+    def __init__(self, name, pages=0, delay=0.0):
+        super().__init__(name, delay)
+        self.cached_prefix_pages = pages
+        self.seeded = None
+
+    def prefix_snapshot(self, max_pages=64):
+        return [{"pages": self.cached_prefix_pages}]
+
+    def seed_prefixes(self, snapshot):
+        self.seeded = snapshot
+        n = sum(e["pages"] for e in snapshot)
+        self.cached_prefix_pages += n
+        return n
+
+    def prefix_hint(self, hints):
+        return self.cached_prefix_pages
+
+
+def test_scale_up_warm_seeds_from_warmest_sibling():
+    from repro.core.worker import ReplicaSet
+    engines = [SeedableEngine("s", pages=5), SeedableEngine("s", pages=2)]
+    rs = ReplicaSet("s", engines, lambda st, ev: None,
+                    engine_factory=lambda: SeedableEngine("s"))
+    rid = rs.scale_up()
+    assert rid == 2
+    new = rs._replicas[rid].engine
+    # seeded from the 5-page sibling (the warmest), not the 2-page one
+    assert new.cached_prefix_pages == 5
+    assert new.seeded == [{"pages": 5}]
+    assert rs.seed_events == [{"rid": 2, "donor_pages": 5, "pages": 5}]
+
+
+def test_scale_up_cold_without_snapshot_support_or_when_disabled():
+    from repro.core.worker import ReplicaSet
+    # siblings without the snapshot surface: cold start, no event
+    rs = ReplicaSet("s", [StubEngine("s")], lambda st, ev: None,
+                    engine_factory=lambda: SeedableEngine("s"))
+    assert rs.scale_up() == 1
+    assert rs.seed_events == []
+    # warm_seed=False: seeding is off even with a warm donor
+    rs2 = ReplicaSet("s", [SeedableEngine("s", pages=4)],
+                     lambda st, ev: None,
+                     engine_factory=lambda: SeedableEngine("s"),
+                     warm_seed=False)
+    assert rs2.scale_up() == 1
+    assert rs2._replicas[1].engine.cached_prefix_pages == 0
+    assert rs2.seed_events == []
+
+
+def test_orchestrator_scale_up_warm_seeds():
+    graph = StageGraph()
+    graph.add_stage(StageSpec("s", "custom", is_output=True))
+    orch = Orchestrator(graph, {"s": [SeedableEngine("s", pages=3)]},
+                        engine_factories={"s": lambda: SeedableEngine("s")})
+    orch.start()
+    assert orch.scale_up("s")
+    rs = orch._workers["s"]
+    assert rs.seed_events and rs.seed_events[-1]["pages"] == 3
+    orch.shutdown()
+
+
+def test_seq_items_stick_to_one_replica():
+    from repro.core.worker import ReplicaSet
+    rs = ReplicaSet("s", [StubEngine("s"), StubEngine("s")],
+                    lambda st, ev: None)
+    req = Request(inputs={})
+    for i in range(4):
+        assert rs.submit(StageInput(req, None, inputs={"x": i}, seq=i))
+    depths = sorted(rs._replicas[r].inbox.qsize() for r in rs.replica_ids)
+    assert depths == [0, 4], "a chunk stream must stay on one replica"
+    # unordered items from another request still spread round-robin
+    other = Request(inputs={})
+    for i in range(2):
+        assert rs.submit(StageInput(other, None, inputs={"x": i}))
+    assert other.req_id not in rs._sticky
+    rs.forget(req.req_id)
+    assert req.req_id not in rs._sticky
+
+
+# ---------------------------------------------------------------------------
 # connector accounting with replicas
 # ---------------------------------------------------------------------------
 

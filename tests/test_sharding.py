@@ -1,10 +1,9 @@
 """Sharding-spec properties (these run on 1 device: specs are pure data)."""
 import jax
-import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ARCH_IDS, get_config
 from repro.models import transformer as T

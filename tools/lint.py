@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""Repo lint gate (``make lint``).
+
+Prefers ruff when it is installed (pinned rule set below, so results
+don't drift with ruff's defaults).  Offline images don't ship ruff, so
+there is a built-in fallback that enforces the subset of those rules we
+rely on repo-wide:
+
+  * the file parses (syntax errors),
+  * no unused ``import`` / ``from .. import`` names (F401),
+  * no trailing whitespace (W291/W293) and no tab indentation (W191),
+  * lines at most MAX_LINE chars (E501),
+  * file ends with exactly one trailing newline (W292/W391).
+
+Both paths lint the same tree and exit non-zero on any finding, so
+``make check`` behaves identically with or without ruff.
+
+  python tools/lint.py [paths...]
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import shutil
+import subprocess
+import sys
+from typing import Iterator, List
+
+MAX_LINE = 100
+# pinned ruff rules: keep in lockstep with the fallback checks above
+RUFF_ARGS = ["check", "--select", "E501,F401,F63,F7,F82,W191,W291,W292,W293",
+             "--line-length", str(MAX_LINE)]
+DEFAULT_PATHS = ["src", "tests", "benchmarks", "tools", "examples"]
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def iter_py(paths: List[str]) -> Iterator[pathlib.Path]:
+    for p in paths:
+        root = REPO / p
+        if root.is_file() and root.suffix == ".py":
+            yield root
+        elif root.is_dir():
+            yield from sorted(root.rglob("*.py"))
+
+
+def _imported_names(tree: ast.Module) -> List[tuple]:
+    """(lineno, bound_name, display_name) for every import binding."""
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                bound = a.asname or a.name.split(".")[0]
+                out.append((node.lineno, bound, a.name))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                bound = a.asname or a.name
+                out.append((node.lineno, bound, a.name))
+    return out
+
+
+def _used_names(tree: ast.Module) -> set:
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            # the root of a dotted use (np.foo -> np) is a Name and is
+            # picked up above; nothing extra needed here
+            pass
+        # names re-exported via __all__ count as used
+        elif (isinstance(node, ast.Assign) and node.targets
+              and isinstance(node.targets[0], ast.Name)
+              and node.targets[0].id == "__all__"):
+            try:
+                used.update(ast.literal_eval(node.value))
+            except (ValueError, SyntaxError):
+                pass
+    return used
+
+
+def lint_file(path: pathlib.Path) -> List[str]:
+    rel = path.relative_to(REPO)
+    text = path.read_text()
+    errors: List[str] = []
+    try:
+        tree = ast.parse(text, filename=str(rel))
+    except SyntaxError as e:
+        return [f"{rel}:{e.lineno}: syntax error: {e.msg}"]
+
+    lines = text.split("\n")
+    for i, line in enumerate(lines, 1):
+        if len(line) > MAX_LINE:
+            errors.append(f"{rel}:{i}: E501 line too long "
+                          f"({len(line)} > {MAX_LINE})")
+        if line != line.rstrip():
+            errors.append(f"{rel}:{i}: W291 trailing whitespace")
+        if line[:1] == "\t" or line.lstrip(" ")[:1] == "\t":
+            errors.append(f"{rel}:{i}: W191 tab indentation")
+    if text and not text.endswith("\n"):
+        errors.append(f"{rel}:{len(lines)}: W292 no newline at end of file")
+    if text.endswith("\n\n"):
+        errors.append(f"{rel}:{len(lines)}: W391 blank line at end of file")
+
+    # F401: unused imports.  __init__.py re-exports are conventional;
+    # a `# noqa` on the import line opts out explicitly.
+    if path.name != "__init__.py":
+        used = _used_names(tree)
+        for lineno, bound, display in _imported_names(tree):
+            if bound in used or bound == "_":
+                continue
+            if "noqa" in lines[lineno - 1]:
+                continue
+            errors.append(f"{rel}:{lineno}: F401 '{display}' imported "
+                          "but unused")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    paths = argv or DEFAULT_PATHS
+    ruff = shutil.which("ruff")
+    if ruff:
+        targets = [str(REPO / p) for p in paths if (REPO / p).exists()]
+        return subprocess.call([ruff, *RUFF_ARGS, *targets])
+    errors: List[str] = []
+    n = 0
+    for f in iter_py(paths):
+        n += 1
+        errors.extend(lint_file(f))
+    for e in errors:
+        print(e)
+    tool = "built-in fallback (ruff not installed)"
+    print(f"lint: {n} files, {len(errors)} finding(s) [{tool}]")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
