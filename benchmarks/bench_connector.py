@@ -15,13 +15,13 @@ from repro.connector.mooncake import make_connector
 
 def _measure(kind: str, payload, iters: int = 50) -> tuple:
     conn = make_connector(kind)
-    conn.put("w", payload)
-    conn.get("w")                      # warm
+    conn.send("w", payload)
+    conn.recv("w", timeout=5.0)        # warm
     t0 = time.perf_counter()
     for i in range(iters):
-        conn.put(f"k{i}", payload)
-        conn.get(f"k{i}")
-        conn.delete(f"k{i}")
+        conn.send(f"k{i}", payload)
+        conn.recv(f"k{i}", timeout=5.0)
+        conn.release(f"k{i}")
     wall = (time.perf_counter() - t0) / iters
     return wall, conn.stats.modeled_time / (iters + 1)
 

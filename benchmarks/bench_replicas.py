@@ -14,6 +14,11 @@ Three measurements (paper §3.2, flexible resource allocation):
      static even replica split vs the ScalingController moving a replica
      from the cold stage to the bottleneck at runtime (same budget).
 
+  D. process isolation overhead — the same slowed-stage workload served
+     by 2 ``isolation="process"`` replicas: spawned workers, items over
+     named shared-memory segments.  Compares against B's threaded
+     2-replica rate to price the cross-process hop.
+
   PYTHONPATH=src python -m benchmarks.bench_replicas [--smoke]
       [--json OUT.json]
 """
@@ -22,54 +27,23 @@ from __future__ import annotations
 import argparse
 import queue as _queue
 import time
-from collections import deque
 from typing import Dict, List
 
 import jax
 import numpy as np
 
 from repro.configs.pipelines import tiny_lm
+from repro.core.config import EngineSpec, ServeConfig, StageConfig
 from repro.core.graph import StageGraph
 from repro.core.orchestrator import Orchestrator
-from repro.core.request import Request, StageEvent
+from repro.core.request import Request
 from repro.core.scaling import ScalingConfig, ScalingController
 from repro.core.stage import StageSpec
 from repro.engine.ar_engine import AREngine
 from repro.engine.kv_cache import PagedKVConfig
 from repro.engine.sampling import SamplingParams
+from repro.engine.stub_engine import StubEngine
 from repro.models import transformer as T
-
-
-class DwellEngine:
-    """Stage stub: one item per step with a fixed dwell.  The sleep
-    releases the GIL, so replicas overlap the way independent devices
-    would — the replica-scaling measurement is about the serving layer,
-    not about Python compute."""
-
-    def __init__(self, name: str, dwell_s: float):
-        self.name = name
-        self.dwell_s = dwell_s
-        self._q: deque = deque()
-        self.busy_time = 0.0
-
-    def enqueue(self, req_id, inputs, sampling, data):
-        self._q.append((req_id, dict(inputs)))
-
-    @property
-    def has_work(self) -> bool:
-        return bool(self._q)
-
-    @property
-    def queue_depth(self) -> int:
-        return len(self._q)
-
-    def step(self) -> List[StageEvent]:
-        if not self._q:
-            return []
-        rid, inputs = self._q.popleft()
-        time.sleep(self.dwell_s)
-        self.busy_time += self.dwell_s
-        return [StageEvent(rid, "finished", inputs, stage=self.name)]
 
 
 def _poisson_serve(orch: Orchestrator, inputs_list, rate_hz: float,
@@ -112,9 +86,10 @@ def _scaling(n_requests: int, dwell_s: float, seed: int) -> Dict[str, float]:
     for n_rep in (1, 2):
         graph = StageGraph()
         graph.add_stage(StageSpec("slow", "custom", is_output=True))
-        engines = {"slow": [DwellEngine("slow", dwell_s)
+        engines = {"slow": [StubEngine("slow", dwell_s)
                             for _ in range(n_rep)]}
-        orch = Orchestrator(graph, engines, routing="least_loaded")
+        orch = Orchestrator(graph, engines,
+                            config=ServeConfig(routing="least_loaded"))
         reqs, wall = _poisson_serve(
             orch, [{"x": i} for i in range(n_requests)], rate, seed)
         orch.shutdown(drain=False)
@@ -122,6 +97,29 @@ def _scaling(n_requests: int, dwell_s: float, seed: int) -> Dict[str, float]:
                  and not r.failed)
         out[n_rep] = ok / wall
     return out
+
+
+def _process_scaling(n_requests: int, dwell_s: float, seed: int) -> float:
+    """D: the 2-replica scaling run again, but each replica is a spawned
+    process worker fed through shared-memory segments."""
+    graph = StageGraph()
+    graph.add_stage(StageSpec("slow", "custom", is_output=True))
+    spec = EngineSpec("repro.engine.stub_engine:make_stub",
+                      {"name": "slow", "dwell_ms": dwell_s * 1e3})
+    config = ServeConfig(routing="least_loaded", stages={
+        "slow": StageConfig(replicas=2, isolation="process",
+                            engine_spec=spec)})
+    orch = Orchestrator(graph, {"slow": StubEngine("slow", dwell_s)},
+                        config=config)
+    orch.start()
+    for _, w in orch._workers["slow"].workers():
+        w.wait_ready(60.0)               # keep spawn cost out of the window
+    reqs, wall = _poisson_serve(
+        orch, [{"x": i} for i in range(n_requests)], 6.0 / dwell_s, seed)
+    orch.shutdown(drain=False)
+    ok = sum(1 for r in reqs if r.completion_time is not None
+             and not r.failed)
+    return ok / wall
 
 
 # ----------------------------------------------------------------------------
@@ -144,9 +142,9 @@ def _affinity_orch(n_rep: int, routing: str, *, max_batch: int,
 
     graph = StageGraph()
     graph.add_stage(StageSpec("lm", "ar", is_output=True))
-    return Orchestrator(graph, {"lm": make_engine()},
-                        replicas={"lm": n_rep}, routing=routing,
-                        engine_factories={"lm": make_engine})
+    config = ServeConfig(routing=routing, stages={
+        "lm": StageConfig(replicas=n_rep, engine_factory=make_engine)})
+    return Orchestrator(graph, {"lm": make_engine()}, config=config)
 
 
 def _affinity_hit_rate(n_rep: int, routing: str, *, families: int,
@@ -192,14 +190,16 @@ def _two_stage(heavy_s: float, light_s: float, heavy_reps: int,
     graph.add_stage(StageSpec("pre", "custom"))
     graph.add_stage(StageSpec("gen", "custom", is_output=True))
     graph.add_edge("pre", "gen", lambda d, p: p, connector="inline")
-    engines = {"pre": [DwellEngine("pre", light_s)
+    engines = {"pre": [StubEngine("pre", light_s)
                        for _ in range(light_reps)],
-               "gen": [DwellEngine("gen", heavy_s)
+               "gen": [StubEngine("gen", heavy_s)
                        for _ in range(heavy_reps)]}
-    facs = {"pre": lambda: DwellEngine("pre", light_s),
-            "gen": lambda: DwellEngine("gen", heavy_s)}
-    return Orchestrator(graph, engines, routing="least_loaded",
-                        engine_factories=facs)
+    config = ServeConfig(routing="least_loaded", stages={
+        "pre": StageConfig(engine_factory=lambda: StubEngine("pre",
+                                                             light_s)),
+        "gen": StageConfig(engine_factory=lambda: StubEngine("gen",
+                                                             heavy_s))})
+    return Orchestrator(graph, engines, config=config)
 
 
 def _autoscale(n_requests: int, heavy_s: float, seed: int):
@@ -237,6 +237,12 @@ def run(n_requests: int = 24, dwell_ms: float = 20.0, families: int = 4,
                  f"{thr[1]:.1f} req/s (dwell {dwell_ms:.0f}ms)"))
     rows.append(("replicas_2x_finished_per_s", thr[2] * 1e3,
                  f"{thr[2]:.1f} req/s speedup={speedup:.2f}x"))
+
+    proc = _process_scaling(n_requests, dwell_ms / 1e3, seed)
+    ratio = proc / thr[2] if thr[2] else 0.0
+    rows.append(("replicas_2x_process_finished_per_s", proc * 1e3,
+                 f"{proc:.1f} req/s isolation=process "
+                 f"({100*ratio:.0f}% of threaded 2x)"))
 
     base = _affinity_hit_rate(1, "affinity", families=families,
                               per_family=per_family, prefix_len=prefix_len,

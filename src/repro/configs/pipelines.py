@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.config import EngineSpec
 from repro.core.graph import StageGraph
 from repro.core.stage import StageSpec
 from repro.engine.ar_engine import AREngine
@@ -29,6 +30,40 @@ from repro.models import transformer as T
 from repro.models.dit import DiTConfig, init_dit
 
 D = 128  # shared hidden size of the tiny pipeline stages
+
+
+def build_stage_engine(pipeline: str, stage: str, **kwargs):
+    """Rebuild ONE stage engine of a named pipeline from builder kwargs.
+
+    This is the module-level :class:`EngineSpec` target process replicas
+    use: ``EngineSpec("repro.configs.pipelines:build_stage_engine",
+    {"pipeline": "pd", "stage": "decode", ...})``.  The builders derive
+    params deterministically from ``seed`` via ``init_params``, so an
+    engine rebuilt in a spawned child carries byte-identical weights to
+    the parent's — greedy decoding through a process replica matches the
+    all-thread run exactly.  Rebuilding runs the full pipeline builder
+    and keeps one stage; at the smoke scale these configs target, that
+    cost is negligible next to the spawn itself.
+    """
+    builder = _BUILDERS.get(pipeline)
+    if builder is None:
+        raise ValueError(f"unknown pipeline {pipeline!r} "
+                         f"(have {sorted(_BUILDERS)})")
+    _, engines, _ = builder(**kwargs)
+    if stage not in engines:
+        raise ValueError(f"pipeline {pipeline!r} has no stage {stage!r} "
+                         f"(have {sorted(engines)})")
+    return engines[stage]
+
+
+def stage_engine_specs(pipeline: str, stages, **kwargs):
+    """Picklable per-stage :class:`EngineSpec` mapping for a pipeline
+    built with exactly ``kwargs`` — what the builders put in their
+    bundle's ``engine_specs`` entry and ``ServeConfig`` consumes for
+    ``isolation='process'`` stages."""
+    return {s: EngineSpec("repro.configs.pipelines:build_stage_engine",
+                          {"pipeline": pipeline, "stage": s, **kwargs})
+            for s in stages}
 
 
 def tiny_lm(name: str, vocab: int = 512, layers: int = 2) -> ModelConfig:
@@ -181,7 +216,14 @@ def build_qwen_omni(*, max_batch: int = 8, thinker_tokens: int = 24,
               "talker_tokens": talker_tokens,
               "engine_factories": {"thinker": make_thinker,
                                    "talker": make_talker,
-                                   "vocoder": make_vocoder}}
+                                   "vocoder": make_vocoder},
+              "engine_specs": stage_engine_specs(
+                  "qwen_omni", ("thinker", "talker", "vocoder"),
+                  max_batch=max_batch, thinker_tokens=thinker_tokens,
+                  talker_tokens=talker_tokens, stream_chunk=stream_chunk,
+                  vocoder_kind=vocoder_kind, dit_steps=dit_steps,
+                  cache_interval=cache_interval, prefix_cache=prefix_cache,
+                  seed=seed)}
     return graph, engines, bundle
 
 
@@ -235,7 +277,12 @@ def build_ar_dit(name: str = "glm_image", *, max_batch: int = 8,
         "ar_tokens": ar_tokens, "image_latents": image_latents,
         "dit_cfg": dit_cfg,
         "engine_factories": {f"{name}_llm": make_llm,
-                             f"{name}_dit": make_dit}}
+                             f"{name}_dit": make_dit},
+        "engine_specs": stage_engine_specs(
+            name, (f"{name}_llm", f"{name}_dit"), max_batch=max_batch,
+            ar_tokens=ar_tokens, image_latents=image_latents,
+            dit_steps=dit_steps, cache_interval=cache_interval,
+            prefix_cache=prefix_cache, seed=seed)}
 
 
 # ----------------------------------------------------------------------------
@@ -250,20 +297,28 @@ def build_pd_disaggregated(cfg: ModelConfig = None, *, max_batch: int = 4,
                            prefix_cache: bool = False, seed: int = 0):
     import jax as _jax
     from repro.models import transformer as _T
+    custom_cfg = cfg is not None
     cfg = cfg or tiny_lm("pd_lm", vocab=512)
     params = _T.init_params(cfg, _jax.random.PRNGKey(seed))
-    prefill = AREngine(
-        "prefill", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
-        emit_kv=True, collect_hidden=False,
-        enable_prefix_cache=prefix_cache,
-        default_sampling=SamplingParams(max_new_tokens=1,
-                                        temperature=temperature),
-        seed=seed)
-    decode = AREngine(
-        "decode", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
-        default_sampling=SamplingParams(max_new_tokens=max_new,
-                                        temperature=temperature),
-        seed=seed)
+
+    def make_prefill():
+        return AREngine(
+            "prefill", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
+            emit_kv=True, collect_hidden=False,
+            enable_prefix_cache=prefix_cache,
+            default_sampling=SamplingParams(max_new_tokens=1,
+                                            temperature=temperature),
+            seed=seed)
+
+    def make_decode():
+        return AREngine(
+            "decode", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
+            default_sampling=SamplingParams(max_new_tokens=max_new,
+                                            temperature=temperature),
+            seed=seed)
+
+    prefill = make_prefill()
+    decode = make_decode()
 
     def prefill2decode(data, payload):
         return {"kv_seed": (payload["kv_k"], payload["kv_v"]),
@@ -274,8 +329,17 @@ def build_pd_disaggregated(cfg: ModelConfig = None, *, max_batch: int = 4,
     graph.add_stage(StageSpec("prefill", "ar"))
     graph.add_stage(StageSpec("decode", "ar", is_output=True))
     graph.add_edge("prefill", "decode", prefill2decode, connector=connector)
+    spec_kwargs = dict(max_batch=max_batch, max_new=max_new,
+                       temperature=temperature, connector=connector,
+                       prefix_cache=prefix_cache, seed=seed)
+    if custom_cfg:
+        spec_kwargs["cfg"] = cfg             # ModelConfig pickles fine
     return graph, {"prefill": prefill, "decode": decode}, {
-        "cfg": cfg, "params": params}
+        "cfg": cfg, "params": params,
+        "engine_factories": {"prefill": make_prefill,
+                             "decode": make_decode},
+        "engine_specs": stage_engine_specs("pd", ("prefill", "decode"),
+                                           **spec_kwargs)}
 
 
 # ----------------------------------------------------------------------------
@@ -301,17 +365,27 @@ def build_epd_disaggregated(*, max_batch: int = 4, max_new: int = 8,
         return [{"prompt_embeds": np.asarray(i["frames"], np.float32)
                  @ w_enc} for i in batch_inputs]
 
-    encoder = EncodeEngine("encoder", encode, max_batch=max_batch)
-    prefill = AREngine(
-        "prefill", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
-        emit_kv=True,
-        default_sampling=SamplingParams(max_new_tokens=1, temperature=0.0),
-        seed=seed)
-    decode = AREngine(
-        "decode", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
-        default_sampling=SamplingParams(max_new_tokens=max_new,
-                                        temperature=0.0),
-        seed=seed)
+    def make_encoder():
+        return EncodeEngine("encoder", encode, max_batch=max_batch)
+
+    def make_prefill():
+        return AREngine(
+            "prefill", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
+            emit_kv=True,
+            default_sampling=SamplingParams(max_new_tokens=1,
+                                            temperature=0.0),
+            seed=seed)
+
+    def make_decode():
+        return AREngine(
+            "decode", cfg, params, kv=_kv(max_batch), max_batch=max_batch,
+            default_sampling=SamplingParams(max_new_tokens=max_new,
+                                            temperature=0.0),
+            seed=seed)
+
+    encoder = make_encoder()
+    prefill = make_prefill()
+    decode = make_decode()
 
     graph = StageGraph()
     graph.add_stage(StageSpec("encoder", "encode"))
@@ -325,8 +399,15 @@ def build_epd_disaggregated(*, max_batch: int = 4, max_new: int = 8,
                                  "first_token": int(p["tokens"][0])},
                    connector=connector)            # prompt-KV hop
     return graph, {"encoder": encoder, "prefill": prefill,
-                   "decode": decode}, {"cfg": cfg, "params": params,
-                                       "w_enc": w_enc}
+                   "decode": decode}, {
+        "cfg": cfg, "params": params, "w_enc": w_enc,
+        "engine_factories": {"encoder": make_encoder,
+                             "prefill": make_prefill,
+                             "decode": make_decode},
+        "engine_specs": stage_engine_specs(
+            "epd", ("encoder", "prefill", "decode"), max_batch=max_batch,
+            max_new=max_new, frame_dim=frame_dim, connector=connector,
+            seed=seed)}
 
 
 # ----------------------------------------------------------------------------
@@ -391,4 +472,28 @@ def build_mimo_audio(*, max_batch: int = 8, ar_tokens: int = 48,
     return graph, {"patch_enc": enc, "mimo_llm": llm, "patch_dec": dec}, {
         "llm_cfg": llm_cfg, "patch": patch,
         "engine_factories": {"patch_enc": make_enc, "mimo_llm": make_llm,
-                             "patch_dec": make_dec}}
+                             "patch_dec": make_dec},
+        "engine_specs": stage_engine_specs(
+            "mimo_audio", ("patch_enc", "mimo_llm", "patch_dec"),
+            max_batch=max_batch, ar_tokens=ar_tokens, patch=patch,
+            prefix_cache=prefix_cache, seed=seed)}
+
+
+def _build_glm_image(**kw):
+    return build_ar_dit("glm_image", **kw)
+
+
+def _build_bagel(**kw):
+    return build_ar_dit("bagel", **kw)
+
+
+# build_stage_engine dispatch table (late-bound: the helper sits above
+# the builders it names)
+_BUILDERS = {
+    "qwen_omni": build_qwen_omni,
+    "glm_image": _build_glm_image,
+    "bagel": _build_bagel,
+    "pd": build_pd_disaggregated,
+    "epd": build_epd_disaggregated,
+    "mimo_audio": build_mimo_audio,
+}

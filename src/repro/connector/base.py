@@ -5,17 +5,20 @@ codec tokens, audio/image tensors — and intra-stage KV / MM caches) between
 stages through a common interface; only lightweight metadata rides the
 control plane.
 
-Two API levels share one data plane:
+The connector surface is the channel API — ``send`` returns a
+:class:`TransferHandle` immediately, ``recv`` blocks (or polls, via
+``poll``) until the key has been published by the producer side, and
+``release`` ends the object's lifetime explicitly.  This is what the
+per-stage workers use: the router publishes on the upstream side and the
+destination stage worker receives + deserializes in its own thread (or
+process), overlapping transfers with compute.  A ``recv`` that waits out
+its timeout raises :class:`TransferTimeout` carrying the key (and edge,
+when the router attached one) so the failure is attributable per-request.
 
-  - synchronous ``put`` / ``get`` / ``delete`` — the original single-thread
-    interface, kept for offline tooling and the lock-step compat path;
-  - asynchronous channel API — ``send`` returns a :class:`TransferHandle`
-    immediately, ``recv`` blocks (or polls, via ``poll``) until the key has
-    been published by the producer side, and ``release`` ends the object's
-    lifetime explicitly.  This is what the per-stage workers use: the
-    router publishes on the upstream side and the destination stage worker
-    receives + deserializes in its own thread, overlapping transfers with
-    compute.
+The original synchronous ``put`` / ``get`` / ``delete`` trio is
+DEPRECATED (it duplicated the resident-bytes accounting path); the shims
+below forward to ``send`` / ``recv`` / ``release`` and emit a
+``DeprecationWarning``.  They disappear next release.
 
 All entry points are thread-safe (one lock + condition per connector
 instance: producers notify, consumers wait).
@@ -36,10 +39,35 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+
+
+class TransferTimeout(TimeoutError):
+    """``recv(key, timeout)`` waited out its timeout.
+
+    Carries the ``key`` (and the ``edge`` the router attached, when the
+    recv ran inside a stage worker's resolve) so the router can fail the
+    one request that owns the transfer instead of killing the worker."""
+
+    def __init__(self, key: str, *, connector: str = "?",
+                 edge: Optional[str] = None,
+                 timeout: Optional[float] = None):
+        self.key = key
+        self.connector = connector
+        self.edge = edge
+        self.timeout = timeout
+        where = f" on edge {edge!r}" if edge else ""
+        after = f" after {timeout:.3f}s" if timeout is not None else ""
+        super().__init__(
+            f"connector[{connector}] recv({key!r}){where} timed out{after}")
+
+    def with_edge(self, edge: str) -> "TransferTimeout":
+        return TransferTimeout(self.key, connector=self.connector,
+                               edge=edge, timeout=self.timeout)
 
 
 @dataclass
@@ -123,8 +151,8 @@ class Connector:
                 remaining = (None if deadline is None
                              else deadline - time.perf_counter())
                 if remaining is not None and remaining <= 0:
-                    raise TimeoutError(
-                        f"connector[{self.name}] recv({key!r}) timed out")
+                    raise TransferTimeout(key, connector=self.name,
+                                          timeout=timeout)
                 self._ready.wait(remaining)
             entry = self._fetch(key)
         payload, modeled = self._unpack(entry)       # heavy copy, unlocked
@@ -139,17 +167,27 @@ class Connector:
             self._meta.pop(key, None)
             self._evict(key)
 
-    # -- synchronous API (compat) -----------------------------------------
+    # -- synchronous API (DEPRECATED shims, one release) -------------------
+    def _deprecated(self, old: str, new: str) -> None:
+        warnings.warn(
+            f"Connector.{old}() is deprecated; use Connector.{new}() — "
+            f"the send/recv/release channel API is the single surface "
+            f"(and the single resident-bytes accounting path)",
+            DeprecationWarning, stacklevel=3)
+
     def put(self, key: str, payload: Any) -> None:
+        self._deprecated("put", "send")
         self.send(key, payload)
 
     def get(self, key: str) -> Any:
+        self._deprecated("get", "recv")
         with self._ready:
             if key not in self._meta:
                 raise KeyError(key)
         return self.recv(key, timeout=0.0)
 
     def delete(self, key: str) -> None:
+        self._deprecated("delete", "release")
         self.release(key)
 
     # -- backend hooks -----------------------------------------------------

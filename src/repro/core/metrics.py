@@ -70,6 +70,9 @@ def stage_report(stage_metrics: Dict[str, Dict[str, float]]) -> str:
     if any("prefix_hit_rate" in m for m in stage_metrics.values()):
         cols += ["cached_tokens", "computed_tokens", "full_block_tokens",
                  "partial_tokens", "prefix_hit_rate"]
+    # only widen the table when a process replica actually died
+    if any(m.get("replica_failures") for m in stage_metrics.values()):
+        cols += ["replica_failures"]
     head = "stage".ljust(12) + "".join(c.rjust(18) for c in cols)
     lines = [head]
     for stage, m in stage_metrics.items():

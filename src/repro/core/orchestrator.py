@@ -46,12 +46,15 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.connector.base import Connector
+from repro.connector import shm_transport
+from repro.connector.base import Connector, TransferTimeout
 from repro.connector.mooncake import make_connector
+from repro.core.config import ServeConfig
 from repro.core.graph import StageGraph
 from repro.core.request import Request, StageEvent
 from repro.core.worker import ReplicaSet, StageInput, WorkerMetrics
@@ -132,51 +135,94 @@ def make_routing_policy(name: str) -> RoutingPolicy:
     return ROUTING_POLICIES[name]()
 
 
+_LEGACY_KWARGS = ("backend", "queue_capacity", "recv_timeout", "replicas",
+                  "routing", "engine_factories", "engine_specs",
+                  "isolation", "warm_seed")
+
+
 class Orchestrator:
     def __init__(self, graph: StageGraph, engines: Dict[str, Any],
                  connectors: Optional[Dict[str, Connector]] = None, *,
-                 backend: str = "threaded", queue_capacity: int = 64,
-                 recv_timeout: float = 60.0,
-                 replicas: Optional[Dict[str, int]] = None,
-                 routing: Any = "affinity",
-                 engine_factories: Optional[Dict[str, Any]] = None,
-                 warm_seed: bool = True):
+                 config: Optional[ServeConfig] = None, **legacy: Any):
         graph.validate()
-        if backend not in ("threaded", "sync"):
-            raise ValueError(f"unknown backend {backend!r}")
+        if legacy:
+            unknown = set(legacy) - set(_LEGACY_KWARGS)
+            if unknown:
+                raise TypeError(f"Orchestrator() got unexpected keyword "
+                                f"argument(s) {sorted(unknown)}")
+            if config is not None:
+                raise TypeError(
+                    "pass config=ServeConfig(...) OR the legacy kwargs, "
+                    "not both")
+            if set(legacy) - {"backend"}:
+                # plain backend= selection predates the kwargs bag and is
+                # not worth a warning; everything else is the bag
+                warnings.warn(
+                    "the Orchestrator(replicas=..., routing=..., "
+                    "engine_factories=..., ...) kwargs bag is deprecated; "
+                    "build a repro.core.config.ServeConfig and pass "
+                    "config=... — it validates eagerly and carries "
+                    "per-stage isolation",
+                    DeprecationWarning, stacklevel=2)
+            config = ServeConfig.from_kwargs(**legacy)
+        if config is None:
+            config = ServeConfig()
+        self.config = config
+        backend = config.backend
         self.graph = graph
         for name in graph.stages:
             if name not in engines:
                 raise ValueError(f"no engine bound for stage {name!r}")
-        # a stage binds one engine or a list of engine replicas; the
-        # ``replicas`` spec grows a stage to N via its engine factory
-        self.engine_factories = dict(engine_factories or {})
+        for name, sc in config.stages.items():
+            if name not in graph.stages and (
+                    sc.replicas != 1 or sc.isolation != "thread"):
+                raise ValueError(f"replica spec for unknown stage {name!r}")
+        self.engine_factories = {
+            name: sc.engine_factory for name, sc in config.stages.items()
+            if sc.engine_factory is not None}
+        self.engine_specs = {
+            name: sc.engine_spec for name, sc in config.stages.items()
+            if sc.engine_spec is not None}
+        # thread stages bind one engine or a list of engine replicas; the
+        # replica spec grows a stage to N via its engine factory.  Process
+        # stages keep only the given engine(s) parent-side (compat views)
+        # and spawn ``replicas`` child workers from the engine spec.
         self.stage_replicas: Dict[str, List[Any]] = {
             name: (list(e) if isinstance(e, (list, tuple)) else [e])
             for name, e in engines.items() if name in graph.stages}
-        for name, n in (replicas or {}).items():
-            if name not in self.stage_replicas:
-                raise ValueError(f"replica spec for unknown stage {name!r}")
-            while len(self.stage_replicas[name]) < n:
+        self._proc_replicas: Dict[str, int] = {}   # spawn count per stage
+        for name in graph.stages:
+            sc = config.stage(name)
+            if sc.isolation == "process":
+                self._proc_replicas[name] = max(
+                    sc.replicas, len(self.stage_replicas[name]))
+                continue
+            while len(self.stage_replicas[name]) < sc.replicas:
                 fac = self.engine_factories.get(name)
                 if fac is None:
                     raise ValueError(
-                        f"stage {name!r}: replicas={n} needs an engine "
-                        f"factory (got {len(self.stage_replicas[name])} "
-                        f"engine(s))")
+                        f"stage {name!r}: replicas={sc.replicas} needs an "
+                        f"engine factory (got "
+                        f"{len(self.stage_replicas[name])} engine(s))")
                 self.stage_replicas[name].append(fac())
         if backend == "sync" and any(len(l) > 1
                                      for l in self.stage_replicas.values()):
             raise ValueError("sync (lock-step) backend is single-replica")
-        self.routing = (routing if isinstance(routing, RoutingPolicy)
-                        else make_routing_policy(routing))
-        self.warm_seed = warm_seed
+        self.routing = (config.routing
+                        if isinstance(config.routing, RoutingPolicy)
+                        else make_routing_policy(config.routing))
+        self.warm_seed = config.warm_seed
+        # requests admitted before start() for a process-isolated source
+        # stage are deferred (the parent-side engine never steps for a
+        # process stage) and flushed through the workers at start()
+        self._deferred: List[Tuple[str, Request]] = []
         # one connector instance per backend kind (shared across edges)
         kinds = {e.connector for e in graph.edges}
         self.connectors = connectors or {k: make_connector(k) for k in kinds}
         self.backend = backend
-        self.queue_capacity = queue_capacity
-        self.recv_timeout = recv_timeout
+        self.queue_capacity = config.queue_capacity
+        self.recv_timeout = config.recv_timeout
+        self._seed_connector: Optional[Connector] = None
         self.requests: Dict[int, Request] = {}
         self._outputs_pending: Dict[int, set] = {}
         self.completed: List[Request] = []
@@ -235,6 +281,11 @@ class Orchestrator:
                     request, self._sp(request), inputs=request.inputs))
                 if not ok:
                     self._fail(request, f"admission to {src!r} rejected")
+            elif src in self._proc_replicas:
+                # the parent-side engine of a process stage never steps;
+                # hold the admission until start() spawns the workers
+                with self._lock:
+                    self._deferred.append((src, request))
             else:
                 request.mark_stage_start(src)
                 self.engines[src].enqueue(
@@ -244,28 +295,59 @@ class Orchestrator:
     # ------------------------------------------------------------------
     # threaded backend lifecycle
     # ------------------------------------------------------------------
+    def _stage_policy(self, name: str) -> RoutingPolicy:
+        """Per-stage routing override from the config; stages without one
+        share the orchestrator-wide policy instance."""
+        r = self.config.stage_routing(name)
+        if isinstance(r, RoutingPolicy):
+            return r
+        if r == self.routing.name:
+            return self.routing
+        return make_routing_policy(r)
+
     def start(self) -> None:
-        """Spin up one replica set (N worker threads) per stage plus the
-        router thread."""
+        """Spin up one replica set (N worker threads, or N spawned worker
+        processes for process-isolated stages) per stage plus the router
+        thread."""
         if self.backend != "threaded":
             raise RuntimeError("start() requires backend='threaded'")
         if self._started:
             return
+        if self._seed_connector is None and self.warm_seed:
+            # warm-seed snapshots ride the connector channel API; the
+            # cross-process data plane serves thread and process
+            # receivers alike (manifest route for the latter)
+            from repro.connector.shm import SharedMemoryConnector
+            self._seed_connector = SharedMemoryConnector(
+                cross_process=shm_transport.available())
         self._router_stop = threading.Event()
-        self._workers = {
-            name: ReplicaSet(name, self.stage_replicas[name], self._emit,
-                             capacity=self.queue_capacity,
-                             metrics_bank=self._stage_metrics[name],
-                             policy=self.routing,
-                             engine_factory=self.engine_factories.get(name),
-                             warm_seed=self.warm_seed)
-            for name in self.graph.stages}
+        self._workers = {}
+        for name in self.graph.stages:
+            sc = self.config.stage(name)
+            self._workers[name] = ReplicaSet(
+                name, self.stage_replicas[name], self._emit,
+                capacity=self.queue_capacity,
+                metrics_bank=self._stage_metrics[name],
+                policy=self._stage_policy(name),
+                engine_factory=self.engine_factories.get(name),
+                warm_seed=self.warm_seed,
+                isolation=sc.isolation,
+                engine_spec=self.engine_specs.get(name),
+                seed_connector=self._seed_connector,
+                n_replicas=self._proc_replicas.get(name))
         self._started = True
         for w in self._workers.values():
             w.start()
         self._router_thread = threading.Thread(
             target=self._router_loop, name="stage-router", daemon=True)
         self._router_thread.start()
+        with self._lock:
+            deferred, self._deferred = self._deferred, []
+        for src, request in deferred:
+            ok = self._workers[src].submit(StageInput(
+                request, self._sp(request), inputs=request.inputs))
+            if not ok:
+                self._fail(request, f"admission to {src!r} rejected")
 
     # ------------------------------------------------------------------
     # dynamic scaling (called by the ScalingController's thread)
@@ -273,13 +355,18 @@ class Orchestrator:
     def replica_counts(self) -> Dict[str, int]:
         return {n: (self._workers[n].n_replicas
                     if self._started and n in self._workers
-                    else len(self.stage_replicas[n]))
+                    else self._proc_replicas.get(
+                        n, len(self.stage_replicas[n])))
                 for n in self.graph.stages}
 
     def scale_up(self, stage: str, engine: Any = None) -> bool:
-        """Add one replica to ``stage`` (needs an engine or a factory)."""
+        """Add one replica to ``stage`` (needs an engine or a factory;
+        process-isolated stages spawn one from the engine spec)."""
         if self._started and stage in self._workers:
             return self._workers[stage].scale_up(engine) is not None
+        if stage in self._proc_replicas:
+            self._proc_replicas[stage] += 1
+            return True
         if engine is None:
             fac = self.engine_factories.get(stage)
             if fac is None:
@@ -293,6 +380,11 @@ class Orchestrator:
         with drain=True its queued and admitted work completes first."""
         if self._started and stage in self._workers:
             return self._workers[stage].scale_down(drain=drain) is not None
+        if stage in self._proc_replicas:
+            if self._proc_replicas[stage] <= 1:
+                return False
+            self._proc_replicas[stage] -= 1
+            return True
         if len(self.stage_replicas[stage]) <= 1:
             return False
         self.stage_replicas[stage].pop()
@@ -385,9 +477,13 @@ class Orchestrator:
                         break
                 time.sleep(0.002)
         # persist any runtime scaling into the engine bindings so a
-        # restart reopens with the same replica topology
+        # restart reopens with the same replica topology (process sets
+        # persist their spawn count — the proxies die with the children)
         for name, w in self._workers.items():
-            self.stage_replicas[name] = w.engines
+            if w.isolation == "process":
+                self._proc_replicas[name] = w.n_replicas
+            else:
+                self.stage_replicas[name] = w.engines
         self._router_stop.set()
         if self._router_thread is not None:
             self._router_thread.join(timeout=30.0)
@@ -451,9 +547,14 @@ class Orchestrator:
             recv_timeout = self.recv_timeout
 
             def resolve(conn=conn, key=key, edge=edge, req=req, kind=kind,
-                        chunk_index=chunk_index, is_last=is_last):
+                        chunk_index=chunk_index, is_last=is_last, eid=eid):
                 try:
                     payload = conn.recv(key, timeout=recv_timeout)
+                except TransferTimeout as e:
+                    # tag the edge so the per-request failure is
+                    # attributable (the worker catches + emits an error
+                    # event; the worker itself keeps serving)
+                    raise e.with_edge(eid) from None
                 finally:
                     conn.release(key)
                 return self._apply_transfer(edge, req, payload, kind,
@@ -482,9 +583,9 @@ class Orchestrator:
                 self._fail(req, f"{eid}: downstream worker unavailable")
             return
         # ---- sync (lock-step) path ----
-        conn.put(key, ev.payload)
-        payload = conn.get(key)
-        conn.delete(key)
+        conn.send(key, ev.payload)
+        payload = conn.recv(key, timeout=self.recv_timeout)
+        conn.release(key)
         self.edge_stats[eid]["transfers"] += 1
         try:
             inputs = self._apply_transfer(edge, req, payload, ev.kind,
@@ -587,6 +688,10 @@ class Orchestrator:
         whose counters still contribute to the stage totals."""
         if self._started and name in self._workers:
             live = {rid: w.engine for rid, w in self._workers[name].workers()}
+        elif name in self._proc_replicas:
+            # not serving: the children are gone, only the spawn count
+            # survives (busy seconds were banked at retirement)
+            live = {rid: None for rid in range(self._proc_replicas[name])}
         else:
             live = dict(enumerate(self.stage_replicas[name]))
         out = {}
@@ -611,8 +716,8 @@ class Orchestrator:
         reps = self._replica_snapshots(name)
         agg: Dict[str, float] = {}
         for c in ("admitted", "filtered", "finished", "events", "steps",
-                  "errors", "order_violations", "busy_time",
-                  "finished_per_s"):
+                  "errors", "order_violations", "replica_failures",
+                  "busy_time", "finished_per_s"):
             agg[c] = sum(r[c] for r in reps.values())
         agg["max_inbox_depth"] = max(
             (r["max_inbox_depth"] for r in reps.values()), default=0)

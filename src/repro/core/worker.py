@@ -78,6 +78,7 @@ class WorkerMetrics:
         self.steps = 0
         self.errors = 0
         self.order_violations = 0       # out-of-order streamed chunks seen
+        self.replica_failures = 0       # process replicas died/killed/wedged
         self.max_inbox_depth = 0
         self.first_active: Optional[float] = None
         self.last_active: Optional[float] = None
@@ -105,6 +106,21 @@ class WorkerMetrics:
         with self._lock:
             self.retired_busy += busy_time
 
+    def note_replica_failure(self) -> None:
+        with self._lock:
+            self.replica_failures += 1
+
+    def note_event(self, ev: StageEvent) -> None:
+        """Count one emitted event.  One request-finish per request: the
+        last streamed chunk, or a "finished" event that wasn't preceded
+        by chunks (an AR stage that streamed emits BOTH — count once)."""
+        self.events += 1
+        streamed = (isinstance(ev.payload, dict)
+                    and ev.payload.get("n_chunks", 0) > 0)
+        if (ev.kind == "finished" and not streamed) or (
+                ev.kind == "chunk" and ev.is_last):
+            self.finished += 1
+
     def raw_delays(self) -> List[float]:
         """Copy of the raw queue-delay samples (merged percentiles across
         replicas, windowed deltas in the scaling controller)."""
@@ -125,6 +141,7 @@ class WorkerMetrics:
                 "steps": self.steps,
                 "errors": self.errors,
                 "order_violations": self.order_violations,
+                "replica_failures": self.replica_failures,
                 "max_inbox_depth": self.max_inbox_depth,
                 "queue_delay_mean": float(qd.mean()) if qd.size else 0.0,
                 "queue_delay_p50": (float(np.percentile(qd, 50))
@@ -141,6 +158,7 @@ class WorkerMetrics:
 class StageWorker:
     """Runs one StageEngine in its own thread with an inbox/emit loop."""
 
+    isolation = "thread"
     _IDLE_WAIT = 0.02            # idle block on the inbox (stop() wakes it)
 
     def __init__(self, name: str, engine: Any,
@@ -295,15 +313,7 @@ class StageWorker:
             self.metrics.steps += 1
             for ev in events:
                 ev.stage = ev.stage or self.name
-                self.metrics.events += 1
-                # one request-finish per request: the last streamed chunk,
-                # or a "finished" event that wasn't preceded by chunks (an
-                # AR stage that streamed emits BOTH — count it once)
-                streamed = (isinstance(ev.payload, dict)
-                            and ev.payload.get("n_chunks", 0) > 0)
-                if (ev.kind == "finished" and not streamed) or (
-                        ev.kind == "chunk" and ev.is_last):
-                    self.metrics.finished += 1
+                self.metrics.note_event(ev)
                 self.emit(self.name, ev)
             self.metrics.note_active()
             self._stepping = False
@@ -352,8 +362,19 @@ class ReplicaSet:
                  metrics_bank: Optional[Dict[int, WorkerMetrics]] = None,
                  policy: Any = None,
                  engine_factory: Optional[Callable[[], Any]] = None,
-                 warm_seed: bool = True) -> None:
-        if not engines:
+                 warm_seed: bool = True,
+                 isolation: str = "thread",
+                 engine_spec: Optional[Any] = None,
+                 seed_connector: Optional[Any] = None,
+                 n_replicas: Optional[int] = None,
+                 process_opts: Optional[Dict[str, Any]] = None) -> None:
+        if isolation not in ("thread", "process"):
+            raise ValueError(f"unknown isolation {isolation!r}")
+        if isolation == "process" and engine_spec is None:
+            raise ValueError(
+                f"stage {stage!r}: isolation='process' needs an "
+                f"engine_spec (picklable 'module:callable' recipe)")
+        if not engines and isolation != "process":
             raise ValueError(f"stage {stage!r} needs at least one engine")
         self.stage = stage
         self.emit = emit
@@ -361,11 +382,21 @@ class ReplicaSet:
         self.policy = policy
         self.engine_factory = engine_factory
         self.warm_seed = warm_seed
-        #: audit trail of warm scale-ups: {"rid", "donor", "pages"}
-        self.seed_events: List[Dict[str, int]] = []
+        self.isolation = isolation
+        self.engine_spec = engine_spec
+        #: connector carrying warm-seed snapshots (channel API); None
+        #: falls back to the direct engine-to-engine hand-off
+        self.seed_connector = seed_connector
+        self.process_opts = dict(process_opts or {})
+        #: audit trail of warm scale-ups:
+        #: {"rid", "donor_pages", "pages", "via"}
+        self.seed_events: List[Dict[str, Any]] = []
+        #: audit trail of replica deaths:
+        #: {"rid", "reason", "readmitted"}
+        self.failure_events: List[Dict[str, Any]] = []
         self.metrics_bank = metrics_bank if metrics_bank is not None else {}
         self._lock = threading.Lock()
-        self._replicas: Dict[int, StageWorker] = {}
+        self._replicas: Dict[int, Any] = {}
         self._order: List[int] = []          # routable replica ids
         self._pending: Dict[int, int] = {}   # in-flight submit() puts
         # seq-carrying (streamed-chunk) items stick to one replica per
@@ -373,18 +404,31 @@ class ReplicaSet:
         # it out of order at two engines at once
         self._sticky: Dict[int, int] = {}
         self._rr = 0                         # fallback round-robin cursor
+        self._seed_seq = 0                   # warm-seed connector key tag
         self._started = False
-        for rid, eng in enumerate(engines):
-            self._install(rid, eng)
+        if isolation == "process":
+            for rid in range(n_replicas or max(1, len(engines))):
+                self._install(rid, None)
+        else:
+            for rid, eng in enumerate(engines):
+                self._install(rid, eng)
 
-    def _install(self, rid: int, engine: Any) -> StageWorker:
-        w = StageWorker(self.stage, engine, self.emit,
-                        capacity=self.capacity,
-                        metrics=self.metrics_bank.setdefault(
-                            rid, WorkerMetrics()),
-                        label=f"{self.stage}#{rid}")
+    def _install(self, rid: int, engine: Any, routable: bool = True) -> Any:
+        metrics = self.metrics_bank.setdefault(rid, WorkerMetrics())
+        label = f"{self.stage}#{rid}"
+        if self.isolation == "process":
+            from repro.core.proc_worker import ProcessStageWorker
+            w: Any = ProcessStageWorker(
+                self.stage, self.engine_spec, self.emit,
+                capacity=self.capacity, metrics=metrics, label=label,
+                on_failure=self._on_replica_failure, **self.process_opts)
+        else:
+            w = StageWorker(self.stage, engine, self.emit,
+                            capacity=self.capacity, metrics=metrics,
+                            label=label)
         self._replicas[rid] = w
-        self._order.append(rid)
+        if routable:
+            self._order.append(rid)
         return w
 
     # -- lifecycle ---------------------------------------------------------
@@ -492,14 +536,54 @@ class ReplicaSet:
         with self._lock:
             self._sticky.pop(req_id, None)
 
+    # -- replica failure (process isolation) -------------------------------
+    def _on_replica_failure(self, worker: Any,
+                            items: List[StageInput]) -> None:
+        """A process replica died or wedged (detected by its pump thread,
+        which calls here): retire it from the routing set and re-admit its
+        in-flight items to the survivors.  Requests that no survivor can
+        take fail cleanly instead of hanging."""
+        with self._lock:
+            rid = next((r for r, w in self._replicas.items()
+                        if w is worker), None)
+            if rid is not None:
+                if rid in self._order:
+                    self._order.remove(rid)
+                del self._replicas[rid]
+                for req_id in [k for k, v in self._sticky.items()
+                               if v == rid]:
+                    del self._sticky[req_id]
+            survivors = bool(self._order)
+        if rid is not None:
+            # bank the dead engine's last-reported dwell, like scale_down
+            self.metrics_bank[rid].note_retired_busy(
+                getattr(worker.engine, "busy_time", 0.0))
+            self.failure_events.append({
+                "rid": rid,
+                "reason": getattr(worker, "failure_reason", None),
+                "readmitted": len(items)})
+        for item in items:
+            ok = survivors and self.submit(item, timeout=5.0)
+            if not ok:
+                self.emit(self.stage, StageEvent(
+                    item.request.req_id, "error",
+                    {"error": f"{self.stage}: replica failed and no "
+                              f"survivor accepted the request"},
+                    stage=self.stage))
+
     # -- dynamic scaling ---------------------------------------------------
-    def _warm_seed(self, engine: Any) -> Optional[Dict[str, int]]:
+    def _warm_seed(self, engine: Any) -> Optional[Dict[str, Any]]:
         """Seed a new engine's prefix index from the warmest sibling.
 
-        Advisory: any failure (engines without snapshot support, pool too
-        small, mid-extract eviction) degrades to a cold start.  The donor
-        snapshot pins its pages only for the duration of the extract, so
-        the sibling keeps serving."""
+        With a ``seed_connector`` the snapshot travels through the
+        connector channel API: the donor's snapshot is ``send``-published
+        under a warm-seed key and the receiver ``recv``s it (a process
+        receiver takes the zero-extra-copy manifest route when the
+        connector can export one).  Advisory either way: any failure
+        (engines without snapshot support, pool too small, transfer
+        timeout, mid-extract eviction) degrades to a cold start.  The
+        donor snapshot pins its pages only for the duration of the
+        extract, so the sibling keeps serving."""
         if not (hasattr(engine, "seed_prefixes")
                 and hasattr(engine, "prefix_hint")):
             return None
@@ -514,19 +598,53 @@ class ReplicaSet:
         if donor is None:
             return None
         try:
-            seeded = engine.seed_prefixes(donor.prefix_snapshot())
+            snap = donor.prefix_snapshot()
+            if not snap:
+                return None
+            if self.seed_connector is not None:
+                seeded, via = self._seed_via_connector(engine, snap)
+            else:
+                seeded, via = engine.seed_prefixes(snap), "direct"
         except Exception:                        # advisory: cold start
             return None
         if not seeded:
             return None
-        return {"donor_pages": best, "pages": seeded}
+        return {"donor_pages": best, "pages": seeded, "via": via}
+
+    def _seed_via_connector(self, engine: Any,
+                            snap: Any) -> Tuple[int, str]:
+        """Route one warm-seed snapshot through the connector channel
+        API (send on the donor side, recv/manifest on the receiver)."""
+        conn = self.seed_connector
+        with self._lock:
+            self._seed_seq += 1
+            key = f"warmseed/{self.stage}/{self._seed_seq}"
+        conn.send(key, {"paths": snap})
+        try:
+            seed_rpc = getattr(engine, "seed_prefixes", None)
+            manifest_of = getattr(conn, "manifest", None)
+            owner = getattr(engine, "_w", None)  # RemoteEngineProxy
+            if owner is not None and manifest_of is not None and getattr(
+                    conn, "cross_process", False):
+                # process receiver + cross-process connector: ship the
+                # picklable manifest, payload stays in shared memory
+                n = owner.seed_manifest(manifest_of(key))
+                return int(n or 0), "manifest"
+            payload = conn.recv(key, timeout=30.0)
+            return int(seed_rpc(payload["paths"])), "connector"
+        finally:
+            conn.release(key)
 
     def scale_up(self, engine: Any = None) -> Optional[int]:
-        """Add one replica (given engine, or a fresh one from the stage
-        factory); returns its replica id, or None without a source.  With
-        ``warm_seed`` the new engine's prefix cache is seeded from the
-        sibling holding the most indexed pages before it joins the routing
-        set, so its first requests already score affinity hits."""
+        """Add one replica (given engine, a fresh one from the stage
+        factory, or — process isolation — a spawned worker built from the
+        stage's engine spec); returns its replica id, or None without a
+        source.  With ``warm_seed`` the new engine's prefix cache is
+        seeded from the sibling holding the most indexed pages before it
+        joins the routing set, so its first requests already score
+        affinity hits."""
+        if self.isolation == "process":
+            return self._scale_up_process()
         if engine is None:
             if self.engine_factory is None:
                 return None
@@ -541,6 +659,26 @@ class ReplicaSet:
                 self.seed_events.append({"rid": rid, **seed})
         if started:
             w.start()
+        return rid
+
+    def _scale_up_process(self) -> Optional[int]:
+        """Spawned replicas join in two steps: install unrouted + start
+        (the child needs to be live before the warm-seed RPC), then seed,
+        then make routable."""
+        with self._lock:
+            rid = next(i for i in range(len(self._replicas) + 1)
+                       if i not in self._replicas)
+            w = self._install(rid, None, routable=False)
+            started = self._started
+        seed = None
+        if started:
+            w.start()
+            if w.wait_ready(timeout=180.0) and self.warm_seed:
+                seed = self._warm_seed(w.engine)
+        with self._lock:
+            self._order.append(rid)
+            if seed is not None:
+                self.seed_events.append({"rid": rid, **seed})
         return rid
 
     def scale_down(self, drain: bool = True) -> Optional[int]:

@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.configs.pipelines import _kv, build_ar_dit, build_mimo_audio, \
     build_qwen_omni
+from repro.core.config import ServeConfig
 from repro.core.graph import StageGraph
 from repro.core.metrics import stage_report, summarize, summarize_queueing
 from repro.core.orchestrator import Orchestrator
@@ -115,8 +116,41 @@ def serve_online(orch: Orchestrator, pipeline, *, n_requests: int,
     return reqs, wall
 
 
+_EPILOG = """\
+serving configuration (ServeConfig):
+  Every flag below the line funnels through ServeConfig.from_args into
+  one typed, validated config object — the same API library callers use:
+
+      from repro.core.config import ServeConfig, StageConfig, EngineSpec
+      config = ServeConfig(
+          backend="threaded", routing="affinity", queue_capacity=64,
+          stages={"decode": StageConfig(
+              replicas=2, isolation="process",
+              engine_spec=EngineSpec(
+                  "repro.configs.pipelines:build_stage_engine",
+                  {"pipeline": "pd", "stage": "decode"}))})
+      orch = Orchestrator(graph, engines, config=config)
+
+  isolation="process" serves a stage from spawned OS processes: request
+  tensors travel through named shared-memory segments, a dead replica is
+  detected by heartbeat and its in-flight requests re-admitted to the
+  survivors.  See examples/process_isolation.py.
+
+examples:
+  # 2 talker replicas, affinity routing
+  python -m repro.launch.serve --pipeline qwen_omni --requests 16 \\
+      --replicas talker=2
+
+  # decode stage in its own process, 5s recv timeout
+  python -m repro.launch.serve --pipeline pd --requests 8 \\
+      --isolation decode=process --recv-timeout 5
+"""
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--pipeline", default=None,
                     choices=[None, "qwen_omni", "qwen3_omni", "glm_image",
                              "mimo_audio", "pd"])
@@ -154,6 +188,25 @@ def main() -> None:
                          "(default) routes to the replica holding the "
                          "longest cached KV prefix, falling back to "
                          "least-loaded")
+    ap.add_argument("--isolation", default=None,
+                    metavar="STAGE=MODE[,..]|MODE",
+                    help="replica isolation per stage (thread|process), "
+                         "e.g. --isolation decode=process; a bare mode "
+                         "applies to every stage. process replicas run "
+                         "in spawned workers with shared-memory tensor "
+                         "transport (threaded backend only)")
+    ap.add_argument("--queue-capacity", dest="queue_capacity", type=int,
+                    default=64,
+                    help="bounded per-stage worker inbox (backpressure)")
+    ap.add_argument("--recv-timeout", dest="recv_timeout", type=float,
+                    default=60.0,
+                    help="connector receive timeout in seconds; on expiry "
+                         "the request fails with a TransferTimeout naming "
+                         "the key and edge")
+    ap.add_argument("--no-warm-seed", dest="warm_seed",
+                    action="store_false", default=True,
+                    help="disable warm-seeding scaled-up replicas from "
+                         "the warmest sibling's prefix snapshot")
     ap.add_argument("--autoscale", action="store_true",
                     help="run the ScalingController: move replicas to the "
                          "bottleneck stage at runtime from WorkerMetrics "
@@ -166,16 +219,10 @@ def main() -> None:
                     help="--autoscale decision window in seconds")
     args = ap.parse_args()
 
-    replicas = None
-    if args.replicas:
-        replicas = {}
-        for part in args.replicas.split(","):
-            stage, _, n = part.partition("=")
-            if not n:
-                ap.error(f"--replicas: expected STAGE=N, got {part!r}")
-            replicas[stage.strip()] = int(n)
-        if args.backend != "threaded":
-            ap.error("--replicas requires --backend threaded")
+    if args.replicas and args.backend != "threaded":
+        ap.error("--replicas requires --backend threaded")
+    if args.isolation and args.backend != "threaded":
+        ap.error("--isolation requires --backend threaded")
 
     if args.pipeline == "qwen_omni":
         graph, engines, bundle = build_qwen_omni(
@@ -203,9 +250,13 @@ def main() -> None:
     else:
         ap.error("pass --pipeline or --arch")
 
-    orch = Orchestrator(graph, engines, backend=args.backend,
-                        replicas=replicas, routing=args.routing,
-                        engine_factories=bundle.get("engine_factories"))
+    try:
+        config = ServeConfig.from_args(
+            args, engine_factories=bundle.get("engine_factories"),
+            engine_specs=bundle.get("engine_specs"))
+        orch = Orchestrator(graph, engines, config=config)
+    except ValueError as e:
+        ap.error(str(e))
     scaler = None
     if args.autoscale:
         from repro.core.scaling import ScalingConfig, ScalingController
@@ -247,7 +298,7 @@ def main() -> None:
         if qd:
             print("per-request queueing delay:",
                   {k: f"p95={v['p95']*1e3:.2f}ms" for k, v in qd.items()})
-        if replicas or args.autoscale:
+        if args.replicas or args.isolation or args.autoscale:
             print("replicas:", orch.replica_counts(),
                   f"routing={args.routing}")
         if scaler is not None:

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs.pipelines import build_pd_disaggregated, tiny_lm, _kv
+from repro.core.config import ServeConfig, StageConfig
 from repro.core.orchestrator import Orchestrator
 from repro.core.request import Request
 from repro.engine.ar_engine import AREngine
@@ -52,6 +53,34 @@ def test_pd_matches_unified_greedy(pd):
         assert got == want[i], (i, got, want[i])
         # decode stage emits all 8 tokens incl. the prefill-sampled first
         assert len(got) == 8
+
+
+def test_pd_process_isolated_decode_matches_unified(pd):
+    """Acceptance: a pipeline with one ``isolation='process'`` stage
+    produces byte-identical greedy outputs to the all-thread run.  The
+    spawned decode replica rebuilds its AREngine from the bundle's
+    EngineSpec (same seed → same params); prompt KV still travels
+    prefill → decode through the shm connector, now across a real
+    process boundary."""
+    graph, engines, bundle = pd
+    config = ServeConfig(stages={"decode": StageConfig(
+        isolation="process", engine_spec=bundle["engine_specs"]["decode"])})
+    orch = Orchestrator(graph, engines, config=config)
+    assert orch._proc_replicas == {"decode": 1}
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 500, size=n).astype(np.int32)
+               for n in (5, 19, 33, 12)]
+    reqs = [Request(inputs={"tokens": p}) for p in prompts]
+    for r in reqs:
+        orch.submit(r)
+    done = orch.run(timeout=300.0)
+    assert len(done) == 4 and not any(r.failed for r in done)
+    want = _unified_tokens(bundle["cfg"], bundle["params"], prompts, 8)
+    for i, r in enumerate(reqs):
+        got = list(r.outputs["decode"][0]["tokens"])
+        assert got == want[i], (i, got, want[i])
+    m = orch.stage_metrics()["decode"]
+    assert m["finished"] == 4 and m["replica_failures"] == 0
 
 
 def test_pd_kv_travels_through_connector(pd):

@@ -7,6 +7,7 @@ import time
 
 import pytest
 
+from repro.core.config import ServeConfig, StageConfig
 from repro.core.graph import StageGraph
 from repro.core.metrics import stage_report
 from repro.core.orchestrator import (CacheAffinityPolicy, Orchestrator,
@@ -53,9 +54,10 @@ def _single_stage(n_replicas, delay=0.0, routing="least_loaded",
     graph = StageGraph()
     graph.add_stage(StageSpec("s", "custom", is_output=True))
     engines = {"s": [StubEngine("s", delay) for _ in range(n_replicas)]}
-    facs = {"s": lambda: StubEngine("s", delay)} if factory else None
-    return Orchestrator(graph, engines, routing=routing,
-                        engine_factories=facs)
+    stages = ({"s": StageConfig(engine_factory=lambda: StubEngine("s", delay))}
+              if factory else {})
+    return Orchestrator(graph, engines,
+                        config=ServeConfig(routing=routing, stages=stages))
 
 
 def _serve(orch, n):
@@ -154,6 +156,10 @@ def test_replicas_serve_and_report_per_replica_metrics():
     assert all(r["admitted"] > 0 for r in reps.values())
     report = stage_report(sm)
     assert "s/0" in report and "s/1" in report
+    # replica_failures column only appears once a replica actually died
+    assert "replica_failures" not in report
+    sm["s"]["replica_failures"] = 1
+    assert "replica_failures" in stage_report(sm)
 
 
 def test_scale_down_drain_loses_no_requests():
@@ -211,7 +217,8 @@ def test_replica_spec_without_factory_rejected():
     graph = StageGraph()
     graph.add_stage(StageSpec("s", "custom", is_output=True))
     with pytest.raises(ValueError, match="factory"):
-        Orchestrator(graph, {"s": StubEngine("s")}, replicas={"s": 3})
+        Orchestrator(graph, {"s": StubEngine("s")},
+                     config=ServeConfig(stages={"s": StageConfig(replicas=3)}))
 
 
 def test_sync_backend_rejects_multi_replica():
@@ -259,7 +266,9 @@ def test_scale_up_warm_seeds_from_warmest_sibling():
     # seeded from the 5-page sibling (the warmest), not the 2-page one
     assert new.cached_prefix_pages == 5
     assert new.seeded == [{"pages": 5}]
-    assert rs.seed_events == [{"rid": 2, "donor_pages": 5, "pages": 5}]
+    # no seed_connector on this set: the direct hand-off path is audited
+    assert rs.seed_events == [{"rid": 2, "donor_pages": 5, "pages": 5,
+                               "via": "direct"}]
 
 
 def test_scale_up_cold_without_snapshot_support_or_when_disabled():
@@ -283,7 +292,8 @@ def test_orchestrator_scale_up_warm_seeds():
     graph = StageGraph()
     graph.add_stage(StageSpec("s", "custom", is_output=True))
     orch = Orchestrator(graph, {"s": [SeedableEngine("s", pages=3)]},
-                        engine_factories={"s": lambda: SeedableEngine("s")})
+                        config=ServeConfig(stages={"s": StageConfig(
+                            engine_factory=lambda: SeedableEngine("s"))}))
     orch.start()
     assert orch.scale_up("s")
     rs = orch._workers["s"]
@@ -329,7 +339,8 @@ def test_connector_resident_bytes_balanced_across_replicas():
     graph.add_edge("a", "b", lambda d, p: {"x": p["x"]}, connector="shm")
     engines = {"a": BlobEngine("a"),
                "b": [StubEngine("b", 0.002) for _ in range(3)]}
-    orch = Orchestrator(graph, engines, routing="least_loaded")
+    orch = Orchestrator(graph, engines,
+                        config=ServeConfig(routing="least_loaded"))
     reqs = _serve(orch, 12)
     orch.run(timeout=60.0)
     assert all(r.completion_time is not None and not r.failed for r in reqs)
@@ -352,10 +363,16 @@ def test_autoscale_moves_replica_to_bottleneck():
     graph.add_edge("pre", "gen", lambda d, p: {"x": p["x"]})
     engines = {"pre": [StubEngine("pre", 0.001) for _ in range(2)],
                "gen": [StubEngine("gen", 0.02) for _ in range(2)]}
-    facs = {"pre": lambda: StubEngine("pre", 0.001),
-            "gen": lambda: StubEngine("gen", 0.02)}
-    orch = Orchestrator(graph, engines, routing="least_loaded",
-                        engine_factories=facs)
+    def _pre():
+        return StubEngine("pre", 0.001)
+
+    def _gen():
+        return StubEngine("gen", 0.02)
+
+    orch = Orchestrator(graph, engines, config=ServeConfig(
+        routing="least_loaded",
+        stages={"pre": StageConfig(engine_factory=_pre),
+                "gen": StageConfig(engine_factory=_gen)}))
     ctl = ScalingController(orch, ScalingConfig(
         interval=0.1, cooldown=0, replica_budget=4))
     orch.start()

@@ -1,0 +1,190 @@
+"""ServeConfig API: eager validation, the argparse funnel, the
+deprecated Orchestrator kwargs shim, and EngineSpec pickling/rebuild.
+
+Pure-python config objects plus stub engines — fast tier.
+"""
+import argparse
+import pickle
+
+import pytest
+
+from repro.core.config import (EngineSpec, ServeConfig, StageConfig,
+                               _parse_stage_map)
+from repro.core.graph import StageGraph
+from repro.core.orchestrator import Orchestrator
+from repro.core.request import Request
+from repro.core.stage import StageSpec
+from repro.engine.stub_engine import StubEngine, make_stub
+
+
+def _graph():
+    g = StageGraph()
+    g.add_stage(StageSpec("s", "custom", is_output=True))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_defaults_valid():
+    cfg = ServeConfig()
+    assert cfg.backend == "threaded"
+    assert cfg.stage("anything") == StageConfig()
+    assert cfg.stage_routing("anything") == "affinity"
+
+
+@pytest.mark.parametrize("kwargs", [
+    {"backend": "celery"},
+    {"queue_capacity": 0},
+    {"recv_timeout": 0.0},
+    {"routing": "psychic"},
+])
+def test_bad_top_level_values_raise(kwargs):
+    with pytest.raises(ValueError):
+        ServeConfig(**kwargs)
+
+
+def test_bad_stage_values_raise():
+    with pytest.raises(ValueError):
+        StageConfig(replicas=0)
+    with pytest.raises(ValueError):
+        StageConfig(isolation="container")
+    with pytest.raises(ValueError):
+        StageConfig(routing="psychic")
+    with pytest.raises(TypeError):
+        ServeConfig(stages={"s": {"replicas": 2}})
+
+
+def test_process_isolation_requires_engine_spec():
+    with pytest.raises(ValueError, match="engine_spec"):
+        StageConfig(isolation="process")
+    spec = EngineSpec("repro.engine.stub_engine:make_stub", {"name": "s"})
+    sc = StageConfig(isolation="process", engine_spec=spec)
+    assert sc.engine_spec is spec
+
+
+def test_sync_backend_rejects_replicas_and_process():
+    with pytest.raises(ValueError, match="single-replica"):
+        ServeConfig(backend="sync", stages={"s": StageConfig(replicas=2)})
+    spec = EngineSpec("repro.engine.stub_engine:make_stub", {})
+    with pytest.raises(ValueError, match="cannot isolate"):
+        ServeConfig(backend="sync", stages={"s": StageConfig(
+            isolation="process", engine_spec=spec)})
+
+
+def test_config_is_immutable():
+    cfg = ServeConfig(stages={"s": StageConfig(replicas=2)})
+    with pytest.raises(Exception):
+        cfg.backend = "sync"
+    with pytest.raises(TypeError):
+        cfg.stages["t"] = StageConfig()
+
+
+def test_with_stage_copies():
+    cfg = ServeConfig(stages={"s": StageConfig(replicas=2)})
+    cfg2 = cfg.with_stage("s", replicas=3).with_stage("t", routing="round_robin")
+    assert cfg.stage("s").replicas == 2          # original untouched
+    assert cfg2.stage("s").replicas == 3
+    assert cfg2.stage_routing("t") == "round_robin"
+    assert cfg2.stage_routing("s") == "affinity"  # inherited default
+
+
+# ---------------------------------------------------------------------------
+# EngineSpec
+# ---------------------------------------------------------------------------
+
+def test_engine_spec_target_must_have_colon():
+    with pytest.raises(ValueError, match="module:callable"):
+        EngineSpec("repro.engine.stub_engine.make_stub")
+
+
+def test_engine_spec_builds_and_pickles():
+    spec = EngineSpec("repro.engine.stub_engine:make_stub",
+                      {"name": "worker", "dwell_ms": 0.0})
+    eng = spec.build()
+    assert isinstance(eng, StubEngine) and eng.name == "worker"
+    clone = pickle.loads(pickle.dumps(spec))
+    assert clone == spec
+    assert isinstance(clone.build(), StubEngine)
+
+
+# ---------------------------------------------------------------------------
+# from_args (the argparse funnel)
+# ---------------------------------------------------------------------------
+
+def test_from_args_round_trip():
+    ns = argparse.Namespace(
+        backend="threaded", queue_capacity=16, recv_timeout=5.0,
+        replicas="a=2,b=3", routing="least_loaded",
+        isolation="b=process", warm_seed=False)
+    spec = EngineSpec("repro.engine.stub_engine:make_stub", {})
+    cfg = ServeConfig.from_args(ns, engine_specs={"b": spec})
+    assert cfg.queue_capacity == 16 and cfg.recv_timeout == 5.0
+    assert cfg.warm_seed is False
+    assert cfg.stage("a").replicas == 2
+    assert cfg.stage("b").replicas == 3
+    assert cfg.stage("a").isolation == "thread"
+    assert cfg.stage("b").isolation == "process"
+    assert cfg.stage("b").engine_spec is spec
+
+
+def test_from_args_bare_isolation_applies_to_all():
+    ns = argparse.Namespace(replicas="a=1,b=1", isolation="process")
+    spec = EngineSpec("repro.engine.stub_engine:make_stub", {})
+    cfg = ServeConfig.from_args(ns, engine_specs={"a": spec, "b": spec})
+    assert all(cfg.stage(s).isolation == "process" for s in ("a", "b"))
+
+
+def test_from_args_partial_namespace_uses_defaults():
+    cfg = ServeConfig.from_args(argparse.Namespace())
+    assert cfg == ServeConfig()
+
+
+def test_parse_stage_map_rejects_bare_values():
+    with pytest.raises(ValueError, match="STAGE=VALUE"):
+        _parse_stage_map("talker2", int, "replicas")
+    assert _parse_stage_map("a=2, b=3", int, "replicas") == {"a": 2, "b": 3}
+
+
+# ---------------------------------------------------------------------------
+# deprecated Orchestrator kwargs shim (one-release compatibility)
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_bag_warns_and_still_works():
+    with pytest.warns(DeprecationWarning, match="kwargs bag is deprecated"):
+        orch = Orchestrator(
+            _graph(), {"s": make_stub("s")},
+            replicas={"s": 2},                 # noqa: DEP002 (shim test)
+            engine_factories={"s": lambda: make_stub("s")})  # noqa: DEP002
+    assert orch.config.stage("s").replicas == 2
+    orch.submit(Request(inputs={"x": 1}))
+    done = orch.run()
+    assert len(done) == 1 and not done[0].failed
+
+
+def test_bare_backend_kwarg_does_not_warn():
+    import warnings as w
+    with w.catch_warnings():
+        w.simplefilter("error", DeprecationWarning)
+        orch = Orchestrator(_graph(), {"s": make_stub("s")}, backend="sync")
+    assert orch.backend == "sync"
+
+
+def test_config_plus_legacy_kwargs_is_an_error():
+    with pytest.raises(TypeError, match="not both"):
+        Orchestrator(
+            _graph(), {"s": make_stub("s")},
+            config=ServeConfig(),
+            routing="round_robin")             # noqa: DEP002 (shim test)
+
+
+def test_unknown_kwarg_is_an_error():
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        Orchestrator(_graph(), {"s": make_stub("s")}, replica_count=2)
+
+
+def test_replica_spec_for_unknown_stage_rejected():
+    with pytest.raises(ValueError, match="unknown stage"):
+        Orchestrator(_graph(), {"s": make_stub("s")},
+                     config=ServeConfig(stages={"t": StageConfig(replicas=2)}))

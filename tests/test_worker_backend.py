@@ -6,6 +6,7 @@ import time
 
 import pytest
 
+from repro.core.config import ServeConfig
 from repro.core.graph import StageGraph
 from repro.core.metrics import summarize, summarize_queueing
 from repro.core.orchestrator import Orchestrator
@@ -121,7 +122,7 @@ def _chain(*engines, capacity=64):
     for up, dn in zip(engines, engines[1:]):
         graph.add_edge(up.name, dn.name, lambda d, p: {"x": p["x"]})
     return Orchestrator(graph, {e.name: e for e in engines},
-                        queue_capacity=capacity)
+                        config=ServeConfig(queue_capacity=capacity))
 
 
 def test_stub_engines_satisfy_protocol():
