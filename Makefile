@@ -3,14 +3,23 @@ STAMP := $(shell date -u +%Y%m%dT%H%M%SZ)
 SMOKE_DUMPS := BENCH_prefix_cache.json BENCH_online.json \
     BENCH_replicas.json BENCH_radix.json
 
-.PHONY: test test-fast lint check serve-online bench-online bench-smoke \
-    bench-compare bench-trend
+.PHONY: test test-fast lint analyze check serve-online bench-online \
+    bench-smoke bench-compare bench-trend
 
-# default pre-commit check: repo-wide lint + sub-minute smoke subset
-check: lint test-fast
+# default pre-commit check: repo-wide lint + invariant analyzer +
+# sub-minute smoke subset
+check: lint analyze test-fast
 
 lint:
 	python tools/lint.py
+
+# repo-specific invariant analyzer (lock discipline/order, blocking
+# calls under locks, connector key lifetime, spawn safety, deprecated
+# surfaces).  Exits non-zero on any non-baselined finding; see
+# tools/analyze/__init__.py for the rule codes and the noqa/baseline
+# workflow.  `make analyze JSON=findings.json` also dumps JSON.
+analyze:
+	python -m tools.analyze $(if $(JSON),--json $(JSON))
 
 test-fast:
 	$(PY) -m pytest -q -m fast

@@ -17,6 +17,7 @@ def _measure(kind: str, payload, iters: int = 50) -> tuple:
     conn = make_connector(kind)
     conn.send("w", payload)
     conn.recv("w", timeout=5.0)        # warm
+    conn.release("w")                  # end the warm key's lifetime
     t0 = time.perf_counter()
     for i in range(iters):
         conn.send(f"k{i}", payload)

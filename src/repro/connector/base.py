@@ -108,8 +108,8 @@ class Connector:
 
     def __init__(self) -> None:
         self.stats = TransferStats()
-        self._meta: Dict[str, dict] = {}
-        self._entries: Dict[str, Any] = {}
+        self._meta: Dict[str, dict] = {}       # guarded-by: _lock
+        self._entries: Dict[str, Any] = {}     # guarded-by: _lock
         self._lock = threading.RLock()
         self._ready = threading.Condition(self._lock)
 
@@ -202,13 +202,13 @@ class Connector:
         return entry, 0.0
 
     # cheap control plane — run under the connector lock
-    def _publish(self, key: str, entry: Any) -> None:
+    def _publish(self, key: str, entry: Any) -> None:  # requires-lock: _lock
         self._entries[key] = entry
 
-    def _fetch(self, key: str) -> Any:
+    def _fetch(self, key: str) -> Any:  # requires-lock: _lock
         return self._entries[key]
 
-    def _evict(self, key: str) -> None:
+    def _evict(self, key: str) -> None:  # requires-lock: _lock
         self._entries.pop(key, None)
 
 

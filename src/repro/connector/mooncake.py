@@ -27,8 +27,8 @@ class MooncakeConnector(Connector):
         self.latency = latency_s
         # store-side occupancy: objects published but not yet released
         # (the channel API makes lifetimes explicit, so this is auditable)
-        self.resident_objects = 0
-        self.peak_resident_objects = 0
+        self.resident_objects = 0              # guarded-by: _lock
+        self.peak_resident_objects = 0         # guarded-by: _lock
 
     def _wire_time(self, nbytes: int) -> float:
         return self.latency + nbytes / self.bandwidth
@@ -57,14 +57,14 @@ class MooncakeConnector(Connector):
                 leaves.append(data)
         return jax.tree.unflatten(treedef, leaves), self._wire_time(nbytes)
 
-    def _publish(self, key: str, entry: Any) -> None:
+    def _publish(self, key: str, entry: Any) -> None:  # requires-lock: _lock
         if key not in self._entries:
             self.resident_objects += 1
             self.peak_resident_objects = max(self.peak_resident_objects,
                                              self.resident_objects)
         self._entries[key] = entry
 
-    def _evict(self, key: str) -> None:
+    def _evict(self, key: str) -> None:  # requires-lock: _lock
         if self._entries.pop(key, None) is not None:
             self.resident_objects -= 1
 

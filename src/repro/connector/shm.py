@@ -52,8 +52,8 @@ class SharedMemoryConnector(Connector):
             raise RuntimeError(
                 "cross_process=True needs multiprocessing.shared_memory")
         self.cross_process = cross_process
-        self.resident_bytes = 0
-        self.peak_resident_bytes = 0
+        self.resident_bytes = 0                # guarded-by: _lock
+        self.peak_resident_bytes = 0           # guarded-by: _lock
 
     # -- data plane (runs without the connector lock) ----------------------
     def _pack(self, payload: Any) -> Tuple[Any, float]:
@@ -106,7 +106,7 @@ class SharedMemoryConnector(Connector):
         return (entry.manifest.nbytes if isinstance(entry, _SegEntry)
                 else entry[2])
 
-    def _publish(self, key: str, entry: Any) -> None:
+    def _publish(self, key: str, entry: Any) -> None:  # requires-lock: _lock
         if key in self._entries:
             self._evict(key)
         self._entries[key] = entry
@@ -114,7 +114,7 @@ class SharedMemoryConnector(Connector):
         self.peak_resident_bytes = max(self.peak_resident_bytes,
                                        self.resident_bytes)
 
-    def _evict(self, key: str) -> None:
+    def _evict(self, key: str) -> None:  # requires-lock: _lock
         entry = self._entries.pop(key, None)
         if entry is None:
             return

@@ -215,7 +215,7 @@ class Orchestrator:
         # requests admitted before start() for a process-isolated source
         # stage are deferred (the parent-side engine never steps for a
         # process stage) and flushed through the workers at start()
-        self._deferred: List[Tuple[str, Request]] = []
+        self._deferred: List[Tuple[str, Request]] = []  # guarded-by: _lock
         # one connector instance per backend kind (shared across edges)
         kinds = {e.connector for e in graph.edges}
         self.connectors = connectors or {k: make_connector(k) for k in kinds}
@@ -223,9 +223,9 @@ class Orchestrator:
         self.queue_capacity = config.queue_capacity
         self.recv_timeout = config.recv_timeout
         self._seed_connector: Optional[Connector] = None
-        self.requests: Dict[int, Request] = {}
-        self._outputs_pending: Dict[int, set] = {}
-        self.completed: List[Request] = []
+        self.requests: Dict[int, Request] = {}        # guarded-by: _lock
+        self._outputs_pending: Dict[int, set] = {}    # guarded-by: _lock
+        self.completed: List[Request] = []            # guarded-by: _lock
         #: stream of finished Requests, in completion order — the online
         #: front-end consumes this while the backend keeps serving
         self.completions: "queue.Queue[Request]" = queue.Queue()
@@ -245,7 +245,7 @@ class Orchestrator:
         # connector boundary; destination workers assert per-request FIFO.
         # Router-thread only — no lock needed.
         self._edge_seq: Dict[Tuple[str, int], int] = {}
-        self._unrouted = 0
+        self._unrouted = 0                   # guarded-by: _counter_lock
         self._counter_lock = threading.Lock()
         self._router_thread: Optional[threading.Thread] = None
         self._router_stop = threading.Event()
@@ -406,7 +406,8 @@ class Orchestrator:
             try:
                 self._route(ev)
             except Exception as e:  # noqa: BLE001 — isolate to the request
-                req = self.requests.get(ev.req_id)
+                with self._lock:
+                    req = self.requests.get(ev.req_id)
                 if req is not None:
                     self._fail(req, f"router: {type(e).__name__}: {e}")
             finally:
@@ -584,8 +585,13 @@ class Orchestrator:
             return
         # ---- sync (lock-step) path ----
         conn.send(key, ev.payload)
-        payload = conn.recv(key, timeout=self.recv_timeout)
-        conn.release(key)
+        try:
+            payload = conn.recv(key, timeout=self.recv_timeout)
+        except Exception as e:    # noqa: BLE001 — fail the request, not run()
+            self._fail(req, f"{eid}: transfer {type(e).__name__}: {e}")
+            return
+        finally:
+            conn.release(key)     # either way the key's lifetime ends here
         self.edge_stats[eid]["transfers"] += 1
         try:
             inputs = self._apply_transfer(edge, req, payload, ev.kind,
@@ -602,7 +608,10 @@ class Orchestrator:
                                        req.data)
 
     def _route(self, ev: StageEvent) -> None:
-        req = self.requests[ev.req_id]
+        with self._lock:
+            req = self.requests.get(ev.req_id)
+        if req is None:
+            return                            # unknown/forgotten request
         stage = ev.stage
         if ev.kind == "error":
             # fault isolation: the failing stage input killed one request
@@ -620,20 +629,25 @@ class Orchestrator:
                 break                         # request already failed
             self._forward(edge, req, ev)
 
-        # terminal output collection
-        outs = self._outputs_pending.get(ev.req_id)
-        if outs is None or stage not in outs:
-            return
-        if req.first_output_time is None:
-            req.first_output_time = time.perf_counter()
-        if ev.kind == "finished" or (ev.kind == "chunk" and ev.is_last):
-            req.outputs.setdefault(stage, []).append(ev.payload)
-            req.mark_stage_end(stage)
-            outs.discard(stage)
-            if not outs:
-                self._finish(req)
-        elif ev.kind == "chunk":
-            req.outputs.setdefault(stage, []).append(ev.payload)
+        # terminal output collection (under the lock: _fail() may pop
+        # the pending-outputs entry from another thread at any moment;
+        # _finish() runs after release so completions.put stays unlocked)
+        done = False
+        with self._lock:
+            outs = self._outputs_pending.get(ev.req_id)
+            if outs is None or stage not in outs:
+                return
+            if req.first_output_time is None:
+                req.first_output_time = time.perf_counter()
+            if ev.kind == "finished" or (ev.kind == "chunk" and ev.is_last):
+                req.outputs.setdefault(stage, []).append(ev.payload)
+                req.mark_stage_end(stage)
+                outs.discard(stage)
+                done = not outs
+            elif ev.kind == "chunk":
+                req.outputs.setdefault(stage, []).append(ev.payload)
+        if done:
+            self._finish(req)
 
     # ------------------------------------------------------------------
     # lock-step compat path

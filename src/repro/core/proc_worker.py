@@ -326,6 +326,7 @@ class ProcessStageWorker:
         # item_id -> (re-admittable StageInput, shipped manifest); holds
         # resolved inputs until the request reaches a terminal event at
         # this stage, which is exactly what failure re-admission replays
+        # guarded-by: _ledger_lock
         self._ledger: "OrderedDict[int, Tuple[StageInput, Any]]" = \
             OrderedDict()
         self._ledger_lock = threading.Lock()
@@ -471,8 +472,7 @@ class ProcessStageWorker:
                 delay = time.perf_counter() - item.t_submit
                 self.metrics.note_admit(delay)
                 req.note_queue_delay(self.name, delay)
-                self.metrics.order_violations += 1
-                self.metrics.errors += 1
+                self.metrics.note_order_violation()
                 self.emit(self.name, StageEvent(
                     req.req_id, "error",
                     {"error": f"{item.origin}: out-of-order chunk "
@@ -492,7 +492,7 @@ class ProcessStageWorker:
             delay = time.perf_counter() - item.t_submit
             self.metrics.note_admit(delay)
             req.note_queue_delay(self.name, delay)
-            self.metrics.errors += 1
+            self.metrics.note_error()
             self.emit(self.name, StageEvent(
                 req.req_id, "error",
                 {"error": f"{item.origin}: {type(e).__name__}: {e}"},
@@ -502,7 +502,7 @@ class ProcessStageWorker:
             delay = time.perf_counter() - item.t_submit
             self.metrics.note_admit(delay)
             req.note_queue_delay(self.name, delay)
-            self.metrics.filtered += 1
+            self.metrics.note_filtered()
             return
         req.mark_stage_start(self.name)
         # the child-side queue is the bounded half of the inbox: wait for
@@ -599,8 +599,7 @@ class ProcessStageWorker:
         if kind in ("ready", "hb", "bye"):
             st = msg[1]
             d = st.get("steps", 0) - self.status.get("steps", 0)
-            if d > 0:
-                self.metrics.steps += d
+            self.metrics.note_steps(d if d > 0 else 0)
             self.status = st
             if kind == "ready":
                 self._ready.set()
@@ -626,7 +625,7 @@ class ProcessStageWorker:
             return False
         if kind == "aerr":                   # child-side admission failure
             ev = msg[1]
-            self.metrics.errors += 1
+            self.metrics.note_error()
             self._drop_ledger(ev.req_id)
             self.emit(self.name, ev)
             return False
@@ -679,7 +678,7 @@ class ProcessStageWorker:
             # stranded requests cleanly instead of re-running them on a
             # sibling (the same inputs would likely kill it too)
             for it in items:
-                self.metrics.errors += 1
+                self.metrics.note_error()
                 self.emit(self.name, StageEvent(
                     it.request.req_id, "error",
                     {"error": f"{self.label}: {reason}"}, stage=self.name))
@@ -698,7 +697,7 @@ class ProcessStageWorker:
             except Exception:                # noqa: BLE001 — last resort
                 pass
         for it in items:
-            self.metrics.errors += 1
+            self.metrics.note_error()
             self.emit(self.name, StageEvent(
                 it.request.req_id, "error",
                 {"error": f"{self.label}: replica died "

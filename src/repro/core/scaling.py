@@ -65,7 +65,10 @@ class ScalingController:
     def __init__(self, orch: Any, config: Optional[ScalingConfig] = None):
         self.orch = orch
         self.cfg = config or ScalingConfig()
-        self.actions: List[Dict[str, Any]] = []
+        # the controller thread appends; benchmarks and tests read the
+        # trace live — take a copy via action_log() while serving
+        self._lock = threading.Lock()
+        self.actions: List[Dict[str, Any]] = []   # guarded-by: _lock
         self.windows = 0
         self._prev_busy: Dict[str, float] = {}
         self._prev_delay_len: Dict[str, Dict[int, int]] = {}
@@ -90,6 +93,11 @@ class ScalingController:
     def join(self, timeout: Optional[float] = None) -> None:
         if self._thread is not None:
             self._thread.join(timeout)
+
+    def action_log(self) -> List[Dict[str, Any]]:
+        """Copy of the decision trace, safe to read while serving."""
+        with self._lock:
+            return list(self.actions)
 
     def _loop(self) -> None:
         while not self._stop.wait(self.cfg.interval):
@@ -191,6 +199,7 @@ class ScalingController:
                 "queue_delay_p95": hot.queue_delay_p95,
                 "replicas": self.orch.replica_counts(),
             })
-            self.actions.append(action)
+            with self._lock:
+                self.actions.append(action)
             self._cooldown = cfg.cooldown
         return action

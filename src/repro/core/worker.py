@@ -70,21 +70,23 @@ class WorkerMetrics:
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
-        self.queue_delays: List[float] = []
-        self.admitted = 0
-        self.filtered = 0
-        self.finished = 0
-        self.events = 0
-        self.steps = 0
-        self.errors = 0
-        self.order_violations = 0       # out-of-order streamed chunks seen
-        self.replica_failures = 0       # process replicas died/killed/wedged
-        self.max_inbox_depth = 0
-        self.first_active: Optional[float] = None
-        self.last_active: Optional[float] = None
+        self.queue_delays: List[float] = []   # guarded-by: _lock
+        self.admitted = 0                     # guarded-by: _lock
+        self.filtered = 0                     # guarded-by: _lock
+        self.finished = 0                     # guarded-by: _lock
+        self.events = 0                       # guarded-by: _lock
+        self.steps = 0                        # guarded-by: _lock
+        self.errors = 0                       # guarded-by: _lock
+        # out-of-order streamed chunks seen
+        self.order_violations = 0             # guarded-by: _lock
+        # process replicas died/killed/wedged
+        self.replica_failures = 0             # guarded-by: _lock
+        self.max_inbox_depth = 0              # guarded-by: _lock
+        self.first_active: Optional[float] = None    # guarded-by: _lock
+        self.last_active: Optional[float] = None     # guarded-by: _lock
         # busy seconds banked from engines this replica no longer runs
         # (scale_down drops the engine object, its dwell must survive)
-        self.retired_busy = 0.0
+        self.retired_busy = 0.0               # guarded-by: _lock
 
     def note_admit(self, delay: float) -> None:
         with self._lock:
@@ -110,16 +112,36 @@ class WorkerMetrics:
         with self._lock:
             self.replica_failures += 1
 
+    def note_filtered(self) -> None:
+        with self._lock:
+            self.filtered += 1
+
+    def note_error(self) -> None:
+        with self._lock:
+            self.errors += 1
+
+    def note_order_violation(self) -> None:
+        with self._lock:
+            self.order_violations += 1
+            self.errors += 1
+
+    def note_steps(self, n: int = 1) -> None:
+        if n:
+            with self._lock:
+                self.steps += n
+
     def note_event(self, ev: StageEvent) -> None:
         """Count one emitted event.  One request-finish per request: the
         last streamed chunk, or a "finished" event that wasn't preceded
         by chunks (an AR stage that streamed emits BOTH — count once)."""
-        self.events += 1
         streamed = (isinstance(ev.payload, dict)
                     and ev.payload.get("n_chunks", 0) > 0)
-        if (ev.kind == "finished" and not streamed) or (
-                ev.kind == "chunk" and ev.is_last):
-            self.finished += 1
+        finish = (ev.kind == "finished" and not streamed) or (
+            ev.kind == "chunk" and ev.is_last)
+        with self._lock:
+            self.events += 1
+            if finish:
+                self.finished += 1
 
     def raw_delays(self) -> List[float]:
         """Copy of the raw queue-delay samples (merged percentiles across
@@ -250,8 +272,7 @@ class StageWorker:
             # reorders and duplicates within one worker are caught.
             last = self._last_seq.get(req.req_id)
             if last is not None and item.seq <= last:
-                self.metrics.order_violations += 1
-                self.metrics.errors += 1
+                self.metrics.note_order_violation()
                 self.emit(self.name, StageEvent(
                     req.req_id, "error",
                     {"error": f"{item.origin}: out-of-order chunk "
@@ -267,12 +288,12 @@ class StageWorker:
             if item.resolve is not None:
                 inputs = item.resolve()
             if inputs is None:               # transfer fn filtered this event
-                self.metrics.filtered += 1
+                self.metrics.note_filtered()
                 return
             req.mark_stage_start(self.name)
             self.engine.enqueue(req.req_id, inputs, item.sampling, req.data)
         except Exception as e:               # noqa: BLE001 — fault isolation
-            self.metrics.errors += 1
+            self.metrics.note_error()
             self.emit(self.name, StageEvent(
                 req.req_id, "error",
                 {"error": f"{item.origin}: {type(e).__name__}: {e}"},
@@ -310,7 +331,7 @@ class StageWorker:
                 self.error = f"{type(e).__name__}: {e}"
                 self._stepping = False
                 break
-            self.metrics.steps += 1
+            self.metrics.note_steps()
             for ev in events:
                 ev.stage = ev.stage or self.name
                 self.metrics.note_event(ev)
@@ -390,22 +411,23 @@ class ReplicaSet:
         self.process_opts = dict(process_opts or {})
         #: audit trail of warm scale-ups:
         #: {"rid", "donor_pages", "pages", "via"}
-        self.seed_events: List[Dict[str, Any]] = []
+        self.seed_events: List[Dict[str, Any]] = []      # guarded-by: _lock
         #: audit trail of replica deaths:
         #: {"rid", "reason", "readmitted"}
-        self.failure_events: List[Dict[str, Any]] = []
+        self.failure_events: List[Dict[str, Any]] = []   # guarded-by: _lock
         self.metrics_bank = metrics_bank if metrics_bank is not None else {}
         self._lock = threading.Lock()
-        self._replicas: Dict[int, Any] = {}
-        self._order: List[int] = []          # routable replica ids
-        self._pending: Dict[int, int] = {}   # in-flight submit() puts
+        self._replicas: Dict[int, Any] = {}  # guarded-by: _lock
+        self._order: List[int] = []          # guarded-by: _lock (routable)
+        # in-flight submit() puts
+        self._pending: Dict[int, int] = {}   # guarded-by: _lock
         # seq-carrying (streamed-chunk) items stick to one replica per
         # request — splitting a chunk stream across replicas would admit
         # it out of order at two engines at once
-        self._sticky: Dict[int, int] = {}
-        self._rr = 0                         # fallback round-robin cursor
-        self._seed_seq = 0                   # warm-seed connector key tag
-        self._started = False
+        self._sticky: Dict[int, int] = {}    # guarded-by: _lock
+        self._rr = 0                         # guarded-by: _lock (rr cursor)
+        self._seed_seq = 0                   # guarded-by: _lock (seed keys)
+        self._started = False                # guarded-by: _lock
         if isolation == "process":
             for rid in range(n_replicas or max(1, len(engines))):
                 self._install(rid, None)
@@ -413,7 +435,8 @@ class ReplicaSet:
             for rid, eng in enumerate(engines):
                 self._install(rid, eng)
 
-    def _install(self, rid: int, engine: Any, routable: bool = True) -> Any:
+    def _install(self, rid: int, engine: Any,
+                 routable: bool = True) -> Any:  # requires-lock: _lock
         metrics = self.metrics_bank.setdefault(rid, WorkerMetrics())
         label = f"{self.stage}#{rid}"
         if self.isolation == "process":
@@ -553,15 +576,15 @@ class ReplicaSet:
                 for req_id in [k for k, v in self._sticky.items()
                                if v == rid]:
                     del self._sticky[req_id]
+                self.failure_events.append({
+                    "rid": rid,
+                    "reason": getattr(worker, "failure_reason", None),
+                    "readmitted": len(items)})
             survivors = bool(self._order)
         if rid is not None:
             # bank the dead engine's last-reported dwell, like scale_down
             self.metrics_bank[rid].note_retired_busy(
                 getattr(worker.engine, "busy_time", 0.0))
-            self.failure_events.append({
-                "rid": rid,
-                "reason": getattr(worker, "failure_reason", None),
-                "readmitted": len(items)})
         for item in items:
             ok = survivors and self.submit(item, timeout=5.0)
             if not ok:
@@ -694,19 +717,22 @@ class ReplicaSet:
             rid = min(self._order,
                       key=lambda r: (self._replicas[r].load(), r))
             self._order.remove(rid)              # unroutable from now on
+            # grab the worker under the lock: a concurrent
+            # _on_replica_failure may delete the entry at any moment
+            w = self._replicas[rid]
         while True:                              # let in-flight puts land
             with self._lock:
                 if self._pending.get(rid, 0) == 0:
                     break
             time.sleep(0.001)
-        w = self._replicas[rid]
         w.stop(drain=drain)
         w.join(timeout=60.0)
         # bank the retired engine's dwell so stage busy_time survives
         self.metrics_bank[rid].note_retired_busy(
             getattr(w.engine, "busy_time", 0.0))
         with self._lock:
-            del self._replicas[rid]
+            # pop, not del: the failure path may have removed it already
+            self._replicas.pop(rid, None)
             # unpin chunk streams that stuck to the retired replica
             for req_id in [k for k, v in self._sticky.items() if v == rid]:
                 del self._sticky[req_id]

@@ -119,15 +119,18 @@ class PageAllocator:
         self.page_size = page_size
         self.index_kind = index_kind
         self._index = make_index(index_kind)
+        # guarded-by-writes: _lock (mutation locked; advisory lock-free
+        # reads are the documented contract of the stats properties)
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         # pages held per request, WITH multiplicity: the total multiplicity
         # of a page across requests equals its refcount
-        self._owned: Dict[int, List[int]] = {}
-        self._refcount: Dict[int, int] = {}
+        self._owned: Dict[int, List[int]] = {}   # guarded-by-writes: _lock
+        self._refcount: Dict[int, int] = {}      # guarded-by-writes: _lock
         # cached pages with refcount 0, oldest first (eviction order);
         # eviction takes the first *leaf* in this order
-        self._lru: "OrderedDict[int, None]" = OrderedDict()
-        self.evictions = 0
+        self._lru: "OrderedDict[int, None]" = (
+            OrderedDict())                       # guarded-by-writes: _lock
+        self.evictions = 0                       # guarded-by-writes: _lock
         self._lock = threading.RLock()
         self._pin_rid = -1              # negative req-ids for snapshot pins
 
@@ -155,7 +158,7 @@ class PageAllocator:
         return len(self._index)
 
     # -- allocation ---------------------------------------------------------
-    def _evict_one(self) -> bool:
+    def _evict_one(self) -> bool:  # requires-lock: _lock
         """Evict the coldest *evictable* cached page: oldest-first in LRU
         order, skipping interior radix nodes with live descendants.  A
         skipped interior page becomes evictable once its subtree is gone
@@ -280,7 +283,7 @@ class PageAllocator:
         self.free(pin_id)
 
     # -- release ------------------------------------------------------------
-    def _decref(self, page: int) -> None:
+    def _decref(self, page: int) -> None:  # requires-lock: _lock
         rc = self._refcount[page] - 1
         if rc > 0:
             self._refcount[page] = rc

@@ -72,7 +72,7 @@ _FAST_MODULES = {
     "test_configs", "test_stage_graph", "test_connector", "test_sharding",
     "test_scheduler", "test_worker_backend", "test_kv_prefix_cache",
     "test_replicas", "test_radix_index", "test_serve_config",
-    "test_process_worker",
+    "test_process_worker", "test_analyzer",
 }
 
 

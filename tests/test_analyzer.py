@@ -1,0 +1,449 @@
+"""Fixture corpus for the invariant analyzer (``tools/analyze``).
+
+For every rule code there is a bad fixture proving the rule fires, an
+automated check that ``# noqa: CODE`` on the flagged line suppresses it
+(and that a *different* code does not), and a check that a baseline
+entry keyed on the finding absorbs it.  A self-scan test asserts the
+repo itself is clean modulo the committed baseline, so the ``make
+check`` gate stays green by construction.
+
+Pure-python AST work, no jax — fast tier."""
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:          # `tools` lives at the repo root
+    sys.path.insert(0, str(REPO))
+
+from tools.analyze import (Baseline, BaselineEntry, analyze_paths,  # noqa: E402
+                           analyze_source, is_suppressed, noqa_codes)
+from tools.analyze.__main__ import main as analyze_main  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# fixture corpus: one bad snippet per rule code
+# ---------------------------------------------------------------------------
+
+CCY001_BAD = """\
+import threading
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0                  # guarded-by: _lock
+
+    def bump(self):
+        self.value += 1
+
+    def peek(self):
+        return self.value
+"""
+
+CCY001_GOOD = """\
+import threading
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0                  # guarded-by: _lock
+
+    def bump(self):
+        with self._lock:
+            self.value += 1
+"""
+
+CCY001_REQUIRES_BAD = """\
+import threading
+
+class Pool:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def _evict_one(self):               # requires-lock: _lock
+        pass
+
+    def trim(self):
+        self._evict_one()
+"""
+
+CCY002_BAD = """\
+import threading
+
+class Pair:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def ab(self):
+        with self._a:
+            with self._b:
+                pass
+
+    def ba(self):
+        with self._b:
+            with self._a:
+                pass
+"""
+
+CCY002_SELF_DEADLOCK = """\
+import threading
+
+class Once:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def twice(self):
+        with self._lock:
+            with self._lock:
+                pass
+"""
+
+CCY002_RLOCK_OK = """\
+import threading
+
+class Once:
+    def __init__(self):
+        self._lock = threading.RLock()
+
+    def twice(self):
+        with self._lock:
+            with self._lock:
+                pass
+"""
+
+CCY003_BAD = """\
+import threading
+import time
+
+class Sleepy:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def nap(self):
+        with self._lock:
+            time.sleep(0.1)
+"""
+
+CCY003_QUEUE_BAD = """\
+import threading
+
+class Pump:
+    def __init__(self, q):
+        self._lock = threading.Lock()
+        self._queue = q
+
+    def push(self, item):
+        with self._lock:
+            self._queue.put(item)
+"""
+
+CCY003_WAIT_OK = """\
+import threading
+
+class Gate:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._ready = threading.Condition(self._lock)
+
+    def await_ready(self):
+        with self._lock:
+            self._ready.wait()
+"""
+
+RES001_BAD = """\
+def leak(conn, payload):
+    conn.send("k", payload)
+"""
+
+RES001_GOOD = """\
+def roundtrip(conn, payload):
+    conn.send("k", payload)
+    out = conn.recv("k")
+    conn.release("k")
+    return out
+"""
+
+RES001_ESCAPES = """\
+def handoff(conn, payload):
+    conn.send("k", payload)
+    schedule_cleanup("k")
+
+def deferred(conn, key, payload):
+    conn.send(key, payload)
+    return lambda: conn.release(key)
+
+def raises_path(conn):
+    import pytest
+    with pytest.raises(KeyError):
+        conn.recv("missing")
+"""
+
+PKL001_BAD = """\
+spec = EngineSpec(lambda: None)
+"""
+
+PKL001_MALFORMED = """\
+spec = EngineSpec("repro.engine.stub_engine.make_stub")
+"""
+
+PKL001_PROCESS_BAD = """\
+def serve(orch):
+    orch.scale_up("llm", engine_factory=lambda: object(),
+                  isolation="process")
+"""
+
+PKL001_RAISES_OK = """\
+import pytest
+
+def test_rejects_bad_spec():
+    with pytest.raises(ValueError, match="module:callable"):
+        EngineSpec("no_colon_here")
+"""
+
+DEP001_BAD = """\
+def legacy(conn, x):
+    conn.put("k", x)
+"""
+
+DEP002_BAD = """\
+def legacy(graph):
+    return Orchestrator(graph, queue_capacity=4)
+"""
+
+# (code, fixture) pairs driving the fires / noqa / baseline param tests
+FIXTURES = [
+    ("CCY001", CCY001_BAD),
+    ("CCY001", CCY001_REQUIRES_BAD),
+    ("CCY002", CCY002_BAD),
+    ("CCY002", CCY002_SELF_DEADLOCK),
+    ("CCY003", CCY003_BAD),
+    ("CCY003", CCY003_QUEUE_BAD),
+    ("RES001", RES001_BAD),
+    ("PKL001", PKL001_BAD),
+    ("PKL001", PKL001_MALFORMED),
+    ("PKL001", PKL001_PROCESS_BAD),
+    ("DEP001", DEP001_BAD),
+    ("DEP002", DEP002_BAD),
+]
+_IDS = ["CCY001-field", "CCY001-requires", "CCY002-cycle", "CCY002-self",
+        "CCY003-sleep", "CCY003-queue", "RES001-leak", "PKL001-lambda",
+        "PKL001-string", "PKL001-process", "DEP001-trio", "DEP002-kwargs"]
+
+
+def _codes(findings):
+    return {f.code for f in findings}
+
+
+def _with_noqa(src, findings, code, suppress_as=None):
+    """Append a noqa marker (for ``suppress_as`` or ``code``) to every
+    line the given code flagged."""
+    marker = suppress_as or code
+    lines = src.split("\n")
+    for f in findings:
+        if f.code == code:
+            lines[f.line - 1] += f"  # noqa: {marker}"
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# every rule fires, and noqa / baseline suppression works for each
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("code,src", FIXTURES, ids=_IDS)
+def test_rule_fires(code, src):
+    findings = analyze_source(src, filename=f"fixture_{code}.py")
+    assert code in _codes(findings), \
+        f"{code} did not fire on its bad fixture"
+
+
+@pytest.mark.parametrize("code,src", FIXTURES, ids=_IDS)
+def test_noqa_with_matching_code_suppresses(code, src):
+    fname = f"fixture_{code}.py"
+    findings = analyze_source(src, filename=fname)
+    patched = _with_noqa(src, findings, code)
+    assert code not in _codes(analyze_source(patched, filename=fname))
+
+
+@pytest.mark.parametrize("code,src", FIXTURES, ids=_IDS)
+def test_noqa_with_other_code_does_not_suppress(code, src):
+    fname = f"fixture_{code}.py"
+    findings = analyze_source(src, filename=fname)
+    patched = _with_noqa(src, findings, code, suppress_as="ZZZ999")
+    assert code in _codes(analyze_source(patched, filename=fname))
+
+
+@pytest.mark.parametrize("code,src", FIXTURES, ids=_IDS)
+def test_bare_noqa_suppresses(code, src):
+    fname = f"fixture_{code}.py"
+    findings = analyze_source(src, filename=fname)
+    lines = src.split("\n")
+    for f in findings:
+        if f.code == code:
+            lines[f.line - 1] += "  # noqa"
+    patched = "\n".join(lines)
+    assert code not in _codes(analyze_source(patched, filename=fname))
+
+
+@pytest.mark.parametrize("code,src", FIXTURES, ids=_IDS)
+def test_baseline_absorbs_finding(code, src):
+    fname = f"fixture_{code}.py"
+    findings = analyze_source(src, filename=fname)
+    bl = Baseline([BaselineEntry(f.file, f.code, f.source,
+                                 justification="grandfathered")
+                   for f in findings])
+    new, old, stale = bl.split(findings)
+    assert new == []
+    assert len(old) == len(findings)
+    assert stale == []
+
+
+# ---------------------------------------------------------------------------
+# rule-specific behavior beyond fires/suppresses
+# ---------------------------------------------------------------------------
+
+def test_ccy001_clean_when_locked():
+    assert _codes(analyze_source(CCY001_GOOD)) == set()
+
+
+def test_ccy001_flags_read_and_write():
+    findings = [f for f in analyze_source(CCY001_BAD)
+                if f.code == "CCY001"]
+    msgs = " | ".join(f.message for f in findings)
+    assert "write to 'value'" in msgs
+    assert "read of 'value'" in msgs
+
+
+def test_ccy001_requires_lock_call_site():
+    findings = analyze_source(CCY001_REQUIRES_BAD)
+    assert any("requires-lock" in f.message for f in findings)
+
+
+def test_ccy002_rlock_reentry_is_fine():
+    assert "CCY002" not in _codes(analyze_source(CCY002_RLOCK_OK))
+
+
+def test_ccy003_condition_wait_on_held_lock_exempt():
+    assert "CCY003" not in _codes(analyze_source(CCY003_WAIT_OK))
+
+
+def test_res001_clean_on_release_and_escapes():
+    assert "RES001" not in _codes(analyze_source(RES001_GOOD))
+    assert "RES001" not in _codes(analyze_source(RES001_ESCAPES))
+
+
+def test_pkl001_well_formed_string_ok():
+    ok = 'spec = EngineSpec("repro.engine.stub_engine:make_stub")\n'
+    assert "PKL001" not in _codes(analyze_source(ok))
+
+
+def test_pkl001_pytest_raises_exempt():
+    assert "PKL001" not in _codes(analyze_source(PKL001_RAISES_OK))
+
+
+# ---------------------------------------------------------------------------
+# framework pieces: noqa parsing, baseline multiset + trend
+# ---------------------------------------------------------------------------
+
+def test_noqa_parsing():
+    assert noqa_codes("x = 1") is None
+    assert noqa_codes("x = 1  # noqa") == frozenset()
+    assert noqa_codes("x = 1  # noqa: DEP001") == {"DEP001"}
+    assert noqa_codes("x  # noqa: CCY001, CCY003") == {"CCY001", "CCY003"}
+    # trailing justification text parses; only the named code is silenced
+    line = "except Exception:  # noqa: BLE001 — fault isolation"
+    assert is_suppressed("BLE001", line)
+    assert not is_suppressed("CCY003", line)
+
+
+def test_baseline_is_multiset_aware():
+    findings = analyze_source(CCY001_BAD, filename="m.py")
+    one = [f for f in findings if f.code == "CCY001"][:1]
+    bl = Baseline([BaselineEntry(f.file, f.code, f.source) for f in one])
+    # two distinct findings, one baselined: the other must stay new
+    new, old, _ = bl.split(findings)
+    assert len(old) == 1 and len(new) == len(findings) - 1
+
+
+def test_baseline_stale_entries_reported():
+    bl = Baseline([BaselineEntry("gone.py", "CCY001", "x += 1",
+                                 justification="since fixed")])
+    new, old, stale = bl.split([])
+    assert (new, old) == ([], []) and len(stale) == 1
+
+
+def test_rebuilt_baseline_keeps_justifications():
+    findings = analyze_source(RES001_BAD, filename="m.py")
+    bl = Baseline([BaselineEntry(f.file, f.code, f.source,
+                                 justification="keep me")
+                   for f in findings])
+    rebuilt = bl.rebuilt_from(findings)
+    assert [e.justification for e in rebuilt.entries] == ["keep me"]
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes, --json dump, --update-baseline, trend line
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, name, src):
+    p = tmp_path / name
+    p.write_text(src)
+    return str(p)
+
+
+def test_cli_exits_nonzero_on_new_finding(tmp_path):
+    bad = _write(tmp_path, "bad.py", RES001_BAD)
+    assert analyze_main([bad, "--no-baseline"]) == 1
+
+
+def test_cli_exits_zero_on_clean_tree(tmp_path):
+    good = _write(tmp_path, "good.py", RES001_GOOD)
+    assert analyze_main([good, "--no-baseline"]) == 0
+
+
+def test_cli_json_dump(tmp_path):
+    bad = _write(tmp_path, "bad.py", DEP001_BAD)
+    out = tmp_path / "findings.json"
+    assert analyze_main([bad, "--no-baseline", "--json", str(out)]) == 1
+    payload = json.loads(out.read_text())
+    assert payload["counts"]["new"] == 1
+    [f] = payload["findings"]
+    assert f["code"] == "DEP001" and f["baselined"] is False
+
+
+def test_cli_update_baseline_then_green(tmp_path, capsys):
+    bad = _write(tmp_path, "bad.py", CCY003_BAD)
+    bl = tmp_path / "baseline.json"
+    assert analyze_main([bad, "--baseline", str(bl),
+                         "--update-baseline"]) == 0
+    # the grandfathered finding no longer fails the gate
+    assert analyze_main([bad, "--baseline", str(bl)]) == 0
+    # ...and once fixed, the stale entry surfaces as a shrink trend
+    pathlib.Path(bad).write_text(CCY001_GOOD)
+    assert analyze_main([bad, "--baseline", str(bl)]) == 0
+    trend = [ln for ln in capsys.readouterr().out.splitlines()
+             if ln.startswith("analyze trend:")]
+    assert trend and "1 finding(s) fixed" in trend[0]
+
+
+def test_cli_select_runs_only_named_codes(tmp_path):
+    both = _write(tmp_path, "both.py", DEP001_BAD + CCY003_BAD)
+    assert analyze_main([both, "--no-baseline",
+                         "--select", "DEP001"]) == 1
+    assert analyze_main([both, "--no-baseline",
+                         "--select", "RES001"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# self-scan: the repo itself is clean modulo the committed baseline
+# ---------------------------------------------------------------------------
+
+def test_repo_clean_modulo_committed_baseline():
+    findings = analyze_paths()
+    new, old, stale = Baseline.load().split(findings)
+    assert new == [], "non-baselined findings:\n" + "\n".join(
+        f.render() for f in new)
+    assert stale == [], "stale baseline entries (run --update-baseline):" \
+        "\n" + "\n".join(f"{e.file}: {e.code} {e.source}" for e in stale)

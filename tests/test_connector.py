@@ -40,6 +40,7 @@ def test_roundtrip_arbitrary_arrays(arr):
         conn = make_connector(kind)
         conn.send("k", {"a": arr})
         got = conn.recv("k", timeout=1.0)["a"]
+        conn.release("k")
         np.testing.assert_array_equal(np.asarray(got), arr)
 
 
@@ -48,6 +49,7 @@ def test_mooncake_cost_model():
     big = np.zeros((1000, 1000), np.float32)     # 4 MB
     conn.send("k", big)
     conn.recv("k", timeout=1.0)
+    conn.release("k")
     # send + recv hops: 2 * (latency + 4e6/10e9)
     expected = 2 * (1e-4 + big.nbytes / 10e9)
     assert abs(conn.stats.modeled_time - expected) < 1e-6
@@ -59,6 +61,8 @@ def test_keys_are_independent():
     conn.send("b", np.zeros(3))
     np.testing.assert_array_equal(conn.recv("a", timeout=1.0), np.ones(3))
     np.testing.assert_array_equal(conn.recv("b", timeout=1.0), np.zeros(3))
+    conn.release("a")
+    conn.release("b")
 
 
 # ---- deprecated put/get/delete shims (one-release compatibility) ----------

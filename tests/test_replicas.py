@@ -429,3 +429,39 @@ def test_autoscale_respects_budget_and_factory_gate():
     assert orch.drain(timeout=60.0)
     orch.shutdown()
     assert all(not r.failed for r in reqs)
+
+
+def test_replica_failure_then_scale_down():
+    """Regression: scale_down used to re-read _replicas[rid] after
+    dropping the lock, racing _on_replica_failure's delete.  A retired-
+    by-failure replica must not break a subsequent scale_down, and the
+    failure event must land in the locked trace."""
+    orch = _single_stage(3, delay=0.002)
+    orch.start()
+    rs = orch._workers["s"]
+    rid = rs.replica_ids[0]
+    w = rs._replicas[rid]
+    rs._on_replica_failure(w, [])            # simulate the pump's callback
+    w.stop(drain=False)
+    w.join(timeout=10.0)
+    assert rid not in rs.replica_ids
+    assert [e["rid"] for e in rs.failure_events] == [rid]
+    retired = rs.scale_down(drain=True)      # must not KeyError
+    assert retired is not None and retired != rid
+    assert orch.replica_counts() == {"s": 1}
+    reqs = _serve(orch, 6)
+    assert orch.drain(timeout=30.0)
+    orch.shutdown()
+    assert all(not r.failed for r in reqs)
+
+
+def test_scaling_action_log_is_a_safe_copy():
+    """Regression: benchmarks read the decision trace while the
+    controller thread appends; action_log() hands out a copy taken
+    under the controller's lock."""
+    orch = _single_stage(1)
+    ctl = ScalingController(orch)
+    assert ctl.action_log() == []
+    assert ctl.action_log() is not ctl.actions
+    with ctl._lock:
+        pass                                 # the lock exists and is free

@@ -2,6 +2,7 @@
 drain/shutdown lifecycle, online-arrival metrics.
 
 Uses pure-python stub engines (no jax) so these run in the fast tier."""
+import threading
 import time
 
 import pytest
@@ -330,3 +331,88 @@ def test_sync_backend_matches_old_lockstep_semantics():
     done = orch.run()
     assert len(done) == 3
     assert all(r.outputs["slow"][0]["x"] == 3 for r in reqs)   # 1 +1 +1
+
+
+def test_worker_metrics_counters_are_thread_safe():
+    """Regression: chunk order violations and engine errors used to be
+    bare `+=` on shared counters from worker threads; the locked note_*
+    methods must not lose increments under contention."""
+    from repro.core.worker import WorkerMetrics
+    m = WorkerMetrics()
+    n_threads, k = 8, 400
+
+    def hammer():
+        for _ in range(k):
+            m.note_error()
+            m.note_filtered()
+            m.note_order_violation()     # bumps order_violations AND errors
+            m.note_steps(2)
+            m.note_event(StageEvent(0, "finished", {"x": 1}, stage="s"))
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = m.snapshot()
+    total = n_threads * k
+    assert snap["errors"] == 2 * total
+    assert snap["filtered"] == total
+    assert snap["order_violations"] == total
+    assert snap["steps"] == 2 * total
+    assert snap["events"] == total and snap["finished"] == total
+
+
+class FlakyConnector:
+    """Connector stub whose recv() times out for chosen requests (the
+    transfer key embeds the req_id as its middle path segment)."""
+
+    def __init__(self, fail_req_ids):
+        self.fail_req_ids = set(fail_req_ids)
+        self.resident = {}
+        self.released = []
+
+    def send(self, key, payload):
+        self.resident[key] = payload
+
+    def recv(self, key, timeout=None):
+        from repro.connector.base import TransferTimeout
+        req_id = int(key.rsplit("/", 2)[1])
+        if req_id in self.fail_req_ids:
+            raise TransferTimeout(key, connector="flaky", timeout=timeout)
+        return self.resident[key]
+
+    def release(self, key):
+        self.resident.pop(key, None)
+        self.released.append(key)
+
+    @property
+    def stats(self):
+        return {}
+
+
+def test_sync_transfer_failure_fails_request_and_releases_key():
+    """Regression: a connector error on the sync (lock-step) path used to
+    escape run() and kill the drain loop; it must fail only the owning
+    request, and the transfer key's lifetime must end either way."""
+    a, b = StubEngine("a"), StubEngine("b")
+    graph = StageGraph()
+    graph.add_stage(StageSpec("a", "custom"))
+    graph.add_stage(StageSpec("b", "custom", is_output=True))
+    graph.add_edge("a", "b", lambda d, p: {"x": p["x"]}, connector="flaky")
+    bad = Request(inputs={"x": 0})
+    good = Request(inputs={"x": 0})
+    conn = FlakyConnector(fail_req_ids={bad.req_id})
+    orch = Orchestrator(graph, {"a": a, "b": b}, backend="sync",
+                        connectors={"flaky": conn})
+    orch.submit(bad)
+    orch.submit(good)
+    done = orch.run()
+    assert bad.failed is not None and "timed out" in bad.failed
+    assert good.failed is None and good.outputs["b"]
+    assert {r.req_id for r in done} == {bad.req_id, good.req_id}
+    # every sent key was released, including the failed transfer's
+    assert conn.resident == {}
+    assert sorted(conn.released) == sorted(
+        k for k in conn.released)  # no double-free bookkeeping surprises
+    assert len(conn.released) == 2

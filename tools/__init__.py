@@ -1,0 +1,2 @@
+"""Repo tooling: lint gate (tools/lint.py) and the repo-specific
+static-analysis framework (tools/analyze)."""

@@ -1,0 +1,62 @@
+"""Repo-specific static analysis: invariants as a machine-checked gate.
+
+The disaggregated backend (per-stage workers, replica sets, process
+isolation, connector-routed transfers) is genuinely concurrent, and its
+correctness invariants used to live only in comments and
+DeprecationWarnings.  This package checks them on every ``make check``.
+
+Rule codes
+----------
+
+  CCY001  lock-discipline — fields annotated ``# guarded-by: _lock``
+          (or ``# guarded-by-writes: _lock`` for the write-locked /
+          lock-free-read PageAllocator pattern) must only be accessed
+          inside ``with self._lock``; methods annotated
+          ``# requires-lock: _lock`` must only be called with it held;
+          read-modify-writes of a guarded field through another object
+          are flagged wherever they appear.
+  CCY002  lock-order — cycles in the static lock-acquisition graph
+          (``with`` nesting plus intra-class call resolution), and
+          re-entry on a non-reentrant ``threading.Lock``.
+  CCY003  blocking-call-under-lock — no queue ``put/get``, ``join()``,
+          ``time.sleep``, connector ``recv/send``, or engine ``step()``
+          / prefix extraction inside a held-lock block (the warm-seed
+          "no lock held during extraction" rule, machine-checked).
+  RES001  connector-key-lifetime — every ``send()``/``recv()`` key flow
+          must reach ``release()``/``read_and_release()`` in the same
+          function or escape via a tracked handle / owner.
+  PKL001  spawn-safety — no lambdas, closures, or function-local defs
+          as ``EngineSpec`` targets or ``engine_factory`` values for
+          ``isolation="process"`` stages.
+  DEP001  deprecated connector ``put()/get()/delete()`` trio (migrated
+          from tools/lint.py; use ``send()/recv()/release()``).
+  DEP002  deprecated ``Orchestrator(**kwargs)`` bag (migrated from
+          tools/lint.py; pass ``config=ServeConfig(...)``).
+
+Suppression and baseline
+------------------------
+
+``# noqa: CODE`` on the offending line suppresses that code only
+(``# noqa: CCY003, RES001`` for several; a bare ``# noqa`` suppresses
+everything — prefer naming codes).  Grandfathered findings live in
+``tools/analyze/baseline.json`` with a one-line justification each;
+``python -m tools.analyze --update-baseline`` rewrites it from the
+current findings, preserving justifications.  The gate exits non-zero
+only on findings that are neither suppressed nor baselined, and prints
+a shrink trend when baseline entries go stale.
+
+Usage::
+
+    python -m tools.analyze                  # repo-wide gate
+    python -m tools.analyze src/repro/core   # subtree
+    python -m tools.analyze --json OUT.json  # machine-readable dump
+    python -m tools.analyze --list-rules
+"""
+from tools.analyze.framework import (Baseline, BaselineEntry, Finding,
+                                     Rule, RULES, analyze_paths,
+                                     analyze_source, is_suppressed,
+                                     noqa_codes, register)
+
+__all__ = ["Baseline", "BaselineEntry", "Finding", "Rule", "RULES",
+           "analyze_paths", "analyze_source", "is_suppressed",
+           "noqa_codes", "register"]

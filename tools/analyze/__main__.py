@@ -1,0 +1,90 @@
+"""CLI for the invariant analyzer (``python -m tools.analyze``).
+
+Exit status is non-zero iff any finding is neither ``# noqa``-suppressed
+nor covered by the committed baseline.  When baseline entries have gone
+stale (their findings were fixed), a compare.py-style trend line reports
+the shrink so the baseline can be regenerated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import List, Optional
+
+from tools.analyze.framework import (BASELINE_PATH, DEFAULT_PATHS,
+                                     Baseline, analyze_paths, RULES)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="repo-specific invariant analyzer (see "
+                    "tools/analyze/__init__.py for the rule codes)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to scan (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--json", metavar="OUT.json", default=None,
+                    help="dump all findings (new + baselined) as JSON")
+    ap.add_argument("--baseline", metavar="FILE",
+                    default=str(BASELINE_PATH),
+                    help="baseline file (default: committed baseline)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings, "
+                         "keeping existing justifications")
+    ap.add_argument("--select", metavar="CODES", default=None,
+                    help="comma-separated rule codes to run")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    # import for side effect: rule modules register themselves
+    from tools.analyze import deprecations, lifetime, locks, spawn  # noqa: F401
+    if args.list_rules:
+        for code in sorted(RULES):
+            r = RULES[code]
+            print(f"{code}  {r.name}: {r.summary}")
+        return 0
+
+    codes = (args.select.split(",") if args.select else None)
+    findings = analyze_paths(args.paths or None, codes=codes)
+
+    bl_path = pathlib.Path(args.baseline)
+    baseline = (Baseline() if args.no_baseline
+                else Baseline.load(bl_path))
+    new, old, stale = baseline.split(findings)
+
+    if args.update_baseline:
+        baseline.rebuilt_from(findings).save(bl_path)
+        print(f"analyze: baseline rewritten with {len(findings)} "
+              f"entr{'y' if len(findings) == 1 else 'ies'} -> {bl_path}")
+        return 0
+
+    if args.json:
+        payload = {
+            "findings": [dict(f.to_json(), baselined=(f in old))
+                         for f in findings],
+            "counts": {"new": len(new), "baselined": len(old),
+                       "stale_baseline": len(stale)},
+        }
+        pathlib.Path(args.json).write_text(
+            json.dumps(payload, indent=2) + "\n")
+
+    for f in new:
+        print(f.render())
+    n_files = len(set(f.file for f in findings)) if findings else 0
+    print(f"analyze: {len(findings)} finding(s) "
+          f"({len(old)} baselined, {len(new)} new"
+          f"{f', across {n_files} files' if findings else ''})")
+    if stale:
+        kept = len(baseline.entries) - len(stale)
+        print(f"analyze trend: baseline {len(baseline.entries)} -> "
+              f"{kept} matched ({len(stale)} finding(s) fixed — run "
+              f"--update-baseline to shrink it)")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

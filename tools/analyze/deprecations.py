@@ -1,0 +1,71 @@
+"""DEP001 / DEP002 — deprecated surfaces, migrated from tools/lint.py.
+
+Kept in lockstep with the runtime DeprecationWarnings (see
+``src/repro/connector/base.py`` and ``src/repro/core/orchestrator.py``)
+so the static gate and the warnings retire together.  Suppression is
+code-aware here — ``# noqa: DEP001`` no longer silences every other
+rule on the line the way the old bare-substring match did.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analyze.framework import (Corpus, FileContext, Finding, Rule,
+                                     register)
+from tools.analyze.locks import _looks_like_connector
+
+_DEP_CONNECTOR_TRIO = {"put", "get", "delete"}
+_DEP_ORCH_KWARGS = {"queue_capacity", "recv_timeout", "replicas", "routing",
+                    "engine_factories", "engine_specs", "isolation",
+                    "warm_seed"}          # bare backend= predates the bag
+
+
+@register
+class ConnectorTrio(Rule):
+    code = "DEP001"
+    name = "deprecated-connector-trio"
+    summary = ("connector put()/get()/delete() is deprecated; use the "
+               "channel API send()/recv()/release()")
+
+    def check(self, ctx: FileContext, corpus: Corpus) -> List[Finding]:
+        out: List[Finding] = []
+        if ctx.tree is None:
+            return out
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if (isinstance(fn, ast.Attribute)
+                    and fn.attr in _DEP_CONNECTOR_TRIO
+                    and _looks_like_connector(fn.value)):
+                out.append(ctx.finding(
+                    node.lineno, self.code,
+                    f"connector .{fn.attr}() is deprecated; use the "
+                    f"channel API (send()/recv()/release())"))
+        return out
+
+
+@register
+class OrchestratorKwargs(Rule):
+    code = "DEP002"
+    name = "deprecated-orchestrator-kwargs"
+    summary = ("Orchestrator(replicas=..., routing=..., ...) kwargs bag "
+               "is deprecated; pass config=ServeConfig(...)")
+
+    def check(self, ctx: FileContext, corpus: Corpus) -> List[Finding]:
+        out: List[Finding] = []
+        if ctx.tree is None:
+            return out
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id == "Orchestrator"):
+                for kw in node.keywords:
+                    if kw.arg in _DEP_ORCH_KWARGS:
+                        out.append(ctx.finding(
+                            kw.value.lineno, self.code,
+                            f"Orchestrator kwargs bag ({kw.arg}=...) is "
+                            f"deprecated; pass config=ServeConfig(...)"))
+        return out

@@ -1,0 +1,278 @@
+"""Core of the repo-specific static-analysis framework.
+
+Pieces (everything else in :mod:`tools.analyze` builds on these):
+
+  - :class:`Finding` — one diagnostic, keyed for baseline matching by
+    ``(file, code, stripped source line)`` so entries survive line-number
+    drift from unrelated edits.
+  - code-aware suppression — ``is_suppressed(code, line)`` implements
+    flake8 ``noqa`` semantics: a bare ``# noqa`` silences every code on
+    the line, ``# noqa: CODE1,CODE2`` silences exactly those codes, and
+    anything else (``# noqa: BLE001 — fault isolation``) silences only
+    the codes it names.  This replaces the old bare-substring match that
+    let an unrelated ruff suppression swallow repo rules too.
+  - :class:`Rule` + :func:`register` — the rule registry.  A rule's
+    ``check(ctx, corpus)`` sees one file plus a corpus handle with a
+    shared cache, so multi-file passes (class inheritance, the lock
+    graph) are built once and reused.
+  - :class:`Baseline` — committed grandfather file
+    (``tools/analyze/baseline.json``): findings matching an entry are
+    reported separately and do not fail the gate; stale entries (fixed
+    findings) are surfaced as a shrink trend.
+
+Run it with ``python -m tools.analyze`` (see ``__main__.py``).
+"""
+from __future__ import annotations
+
+import ast
+import json
+import pathlib
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+DEFAULT_PATHS = ["src", "tests", "benchmarks", "tools", "examples"]
+BASELINE_PATH = pathlib.Path(__file__).resolve().parent / "baseline.json"
+
+# ---------------------------------------------------------------------------
+# suppression (code-aware noqa)
+# ---------------------------------------------------------------------------
+
+_NOQA_RE = re.compile(
+    r"#\s*noqa(?P<colon>:\s*(?P<codes>[A-Z]+[0-9]+"
+    r"(?:\s*,\s*[A-Z]+[0-9]+)*))?", re.IGNORECASE)
+
+
+def noqa_codes(line: str) -> Optional[frozenset]:
+    """Parse the ``noqa`` marker on one source line.
+
+    Returns None when there is no marker, an empty frozenset for a bare
+    ``# noqa`` (suppress everything), or the set of named codes.
+    """
+    m = _NOQA_RE.search(line)
+    if m is None:
+        return None
+    codes = m.group("codes")
+    if codes is None:
+        return frozenset()
+    return frozenset(c.strip().upper() for c in codes.split(","))
+
+
+def is_suppressed(code: str, line: str) -> bool:
+    """True when ``line`` carries a noqa that silences ``code``."""
+    codes = noqa_codes(line)
+    if codes is None:
+        return False
+    return not codes or code.upper() in codes
+
+
+# ---------------------------------------------------------------------------
+# findings
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Finding:
+    """One diagnostic.  ``source`` is the stripped text of the flagged
+    line — the stable part of the baseline key."""
+    file: str                 # repo-relative posix path
+    line: int
+    code: str
+    message: str
+    source: str = ""
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line}: {self.code} {self.message}"
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.file, self.code, self.source)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"file": self.file, "line": self.line, "code": self.code,
+                "message": self.message, "source": self.source}
+
+
+# ---------------------------------------------------------------------------
+# file context + corpus
+# ---------------------------------------------------------------------------
+
+class FileContext:
+    """One parsed source file plus the helpers every rule needs."""
+
+    def __init__(self, path: pathlib.Path, text: Optional[str] = None,
+                 rel: Optional[str] = None):
+        self.path = path
+        self.text = path.read_text() if text is None else text
+        self.lines = self.text.split("\n")
+        if rel is None:
+            try:
+                rel = path.resolve().relative_to(REPO).as_posix()
+            except ValueError:        # outside the repo (tests, tmp dirs)
+                rel = path.as_posix()
+        self.rel = rel
+        self.tree: Optional[ast.Module] = None
+        self.syntax_error: Optional[SyntaxError] = None
+        try:
+            self.tree = ast.parse(self.text, filename=self.rel)
+        except SyntaxError as e:
+            self.syntax_error = e
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def finding(self, lineno: int, code: str, message: str) -> Finding:
+        return Finding(self.rel, lineno, code, message,
+                       source=self.line_text(lineno).strip())
+
+
+class Corpus:
+    """All files of one analysis run plus a shared cache for passes that
+    need a cross-file view (class registry, lock graph)."""
+
+    def __init__(self, contexts: Sequence[FileContext]):
+        self.contexts = list(contexts)
+        self.cache: Dict[str, Any] = {}
+
+
+# ---------------------------------------------------------------------------
+# rule registry
+# ---------------------------------------------------------------------------
+
+class Rule:
+    """One registered rule.  Subclasses set ``code``/``name``/``summary``
+    and implement ``check``; findings on lines carrying a matching
+    ``# noqa: CODE`` are dropped by the runner, not the rule."""
+
+    code = "XXX000"
+    name = "unnamed"
+    summary = ""
+
+    def check(self, ctx: FileContext, corpus: Corpus) -> List[Finding]:
+        raise NotImplementedError
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(rule_cls):
+    """Class decorator: instantiate and add to the registry."""
+    RULES[rule_cls.code] = rule_cls()
+    return rule_cls
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BaselineEntry:
+    file: str
+    code: str
+    source: str
+    justification: str = ""
+    line: int = 0                    # informational only (drifts)
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.file, self.code, self.source)
+
+
+@dataclass
+class Baseline:
+    entries: List[BaselineEntry] = field(default_factory=list)
+
+    @classmethod
+    def load(cls, path: pathlib.Path = BASELINE_PATH) -> "Baseline":
+        if not path.exists():
+            return cls()
+        data = json.loads(path.read_text())
+        return cls([BaselineEntry(**e) for e in data.get("entries", [])])
+
+    def save(self, path: pathlib.Path = BASELINE_PATH) -> None:
+        data = {"entries": [vars(e) for e in self.entries]}
+        path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+
+    def split(self, findings: Sequence[Finding]
+              ) -> Tuple[List[Finding], List[Finding], List[BaselineEntry]]:
+        """(new, baselined, stale_entries).  Matching is multiset-aware:
+        N entries with one key absorb at most N findings with that key."""
+        budget: Dict[Tuple[str, str, str], int] = {}
+        for e in self.entries:
+            budget[e.key()] = budget.get(e.key(), 0) + 1
+        new: List[Finding] = []
+        old: List[Finding] = []
+        for f in findings:
+            if budget.get(f.key(), 0) > 0:
+                budget[f.key()] -= 1
+                old.append(f)
+            else:
+                new.append(f)
+        stale = []
+        seen: Dict[Tuple[str, str, str], int] = {}
+        for e in self.entries:
+            seen[e.key()] = seen.get(e.key(), 0) + 1
+            if seen[e.key()] > sum(1 for f in old if f.key() == e.key()):
+                stale.append(e)
+        return new, old, stale
+
+    def rebuilt_from(self, findings: Sequence[Finding]) -> "Baseline":
+        """A fresh baseline holding exactly ``findings``, keeping the
+        justification of any entry whose key survives."""
+        just = {e.key(): e.justification for e in self.entries}
+        return Baseline([
+            BaselineEntry(f.file, f.code, f.source,
+                          justification=just.get(
+                              f.key(), "TODO: justify or fix"),
+                          line=f.line)
+            for f in findings])
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def iter_py(paths: Sequence[str]) -> Iterator[pathlib.Path]:
+    for p in paths:
+        root = pathlib.Path(p)
+        if not root.is_absolute():
+            root = REPO / p
+        if root.is_file() and root.suffix == ".py":
+            yield root
+        elif root.is_dir():
+            yield from sorted(root.rglob("*.py"))
+
+
+def analyze_contexts(contexts: Sequence[FileContext],
+                     codes: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the registered rules (optionally a subset of codes) over the
+    given files; returns noqa-filtered findings in deterministic order."""
+    # rule modules self-register on import
+    from tools.analyze import deprecations, lifetime, locks, spawn  # noqa: F401
+    corpus = Corpus(contexts)
+    findings: List[Finding] = []
+    for code in sorted(RULES):
+        if codes is not None and code not in codes:
+            continue
+        rule = RULES[code]
+        for ctx in corpus.contexts:
+            if ctx.syntax_error is not None:
+                continue              # the lint gate reports syntax errors
+            for f in rule.check(ctx, corpus):
+                if not is_suppressed(f.code, ctx.line_text(f.line)):
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.file, f.line, f.code, f.message))
+    return findings
+
+
+def analyze_paths(paths: Optional[Sequence[str]] = None,
+                  codes: Optional[Sequence[str]] = None) -> List[Finding]:
+    contexts = [FileContext(p) for p in iter_py(paths or DEFAULT_PATHS)]
+    return analyze_contexts(contexts, codes=codes)
+
+
+def analyze_source(text: str, filename: str = "<memory>",
+                   codes: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Analyze one in-memory source blob (the fixture-corpus tests)."""
+    ctx = FileContext(pathlib.Path(filename), text=text, rel=filename)
+    return analyze_contexts([ctx], codes=codes)

@@ -1,0 +1,193 @@
+"""RES001 — connector key lifetime.
+
+Every connector ``send()`` / ``recv()`` key flow must reach a
+``release()`` / ``read_and_release()`` in the same function, or
+demonstrably hand ownership off:
+
+  - the key variable is captured by a nested ``def`` / ``lambda``
+    (deferred cleanup callbacks, the orchestrator's resolve path),
+  - the key expression is passed to another call (an owner that manages
+    the lifetime),
+  - the send/recv result is kept (a tracked ``TransferHandle``),
+  - the key is returned.
+
+``recv()`` inside ``with pytest.raises(...)`` is exempt — the test is
+asserting the transfer fails, so there is nothing to release.
+
+Receivers are matched with the same heuristic the DEP rules use: a name
+containing ``conn`` (``conn``, ``connector``, ``seed_connector``).
+Keys are compared structurally (``ast.dump``), so f-string keys like
+``f"k{i}"`` pair up between ``send`` and ``release``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from tools.analyze.framework import (Corpus, FileContext, Finding, Rule,
+                                     register)
+from tools.analyze.locks import _looks_like_connector
+
+_OPENERS = {"send", "recv"}
+_CLOSERS = {"release", "read_and_release"}
+
+
+def _scopes(tree: ast.Module) -> Iterator[Tuple[str, List[ast.stmt]]]:
+    """Yield (name, body) for the module and every (nested) function."""
+    yield "<module>", tree.body
+    stack: List[ast.AST] = [tree]
+    while stack:
+        node = stack.pop()
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield sub.name, sub.body
+
+
+def _walk_scope(stmts: List[ast.stmt]) -> Iterator[ast.AST]:
+    """Walk statements, yielding nested function nodes but not
+    descending into their bodies (they are separate scopes)."""
+    todo: List[ast.AST] = list(stmts)
+    while todo:
+        node = todo.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        todo.extend(ast.iter_child_nodes(node))
+
+
+def _key_of(call: ast.Call) -> Optional[ast.expr]:
+    if call.args:
+        return call.args[0]
+    for kw in call.keywords:
+        if kw.arg == "key":
+            return kw.value
+    return None
+
+
+def _is_raises_with(node: ast.AST) -> bool:
+    if not isinstance(node, (ast.With, ast.AsyncWith)):
+        return False
+    for item in node.items:
+        e = item.context_expr
+        if isinstance(e, ast.Call):
+            fn = e.func
+            name = (fn.attr if isinstance(fn, ast.Attribute)
+                    else fn.id if isinstance(fn, ast.Name) else None)
+            if name == "raises":
+                return True
+    return False
+
+
+@register
+class ConnectorLifetime(Rule):
+    code = "RES001"
+    name = "connector-key-lifetime"
+    summary = ("connector send()/recv() key never reaches release()/"
+               "read_and_release() and does not escape the function")
+
+    def check(self, ctx: FileContext, corpus: Corpus) -> List[Finding]:
+        out: List[Finding] = []
+        tree = ctx.tree
+        if tree is None:
+            return out
+        for scope_name, body in _scopes(tree):
+            out.extend(self._check_scope(ctx, scope_name, body))
+        return out
+
+    def _check_scope(self, ctx: FileContext, scope_name: str,
+                     body: List[ast.stmt]) -> List[Finding]:
+        opened: Dict[str, Tuple[int, Set[str]]] = {}   # key dump
+        closed: Set[str] = set()
+        escaped: Set[str] = set()
+        raises_keys: Set[str] = set()
+        nested: List[ast.AST] = []
+        returned_names: Set[str] = set()
+        kept_results: Set[int] = set()     # Call ids whose result is kept
+
+        for node in _walk_scope(body):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                if isinstance(node.value, ast.Call):
+                    kept_results.add(id(node.value))
+            elif isinstance(node, ast.Return) and node.value is not None:
+                if isinstance(node.value, ast.Call):
+                    kept_results.add(id(node.value))
+                for sub in ast.walk(node.value):
+                    if isinstance(sub, ast.Name):
+                        returned_names.add(sub.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.Lambda)):
+                nested.append(node)
+            if _is_raises_with(node):
+                for sub in _walk_scope(node.body):
+                    call = self._channel_op(sub)
+                    if call is not None and call[0] in _OPENERS:
+                        key = _key_of(call[2])
+                        if key is not None:
+                            raises_keys.add(ast.dump(key))
+
+        for node in _walk_scope(body):
+            op = self._channel_op(node)
+            if op is None:
+                # key passed to a non-connector call: ownership handed
+                # off to something that may manage the lifetime
+                if (isinstance(node, ast.Call)
+                        and not (isinstance(node.func, ast.Attribute)
+                                 and _looks_like_connector(
+                                     node.func.value))):
+                    for arg in list(node.args) + [kw.value
+                                                  for kw in node.keywords]:
+                        escaped.add(ast.dump(arg))
+                continue
+            kind, recv_name, call = op
+            key = _key_of(call)
+            if key is None:
+                continue
+            dump = ast.dump(key)
+            if kind in _CLOSERS:
+                closed.add(dump)
+            else:
+                if id(call) in kept_results:
+                    escaped.add(dump)      # tracked TransferHandle
+                if dump not in opened:
+                    opened[dump] = (call.lineno, set())
+                opened[dump][1].add(f"{recv_name}.{kind}")
+
+        captured: Set[str] = set()
+        for fn in nested:
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Name):
+                    captured.add(sub.id)
+
+        out: List[Finding] = []
+        for dump, (lineno, ops) in sorted(opened.items(),
+                                          key=lambda kv: kv[1][0]):
+            if dump in closed or dump in escaped or dump in raises_keys:
+                continue
+            # a Name key captured by a nested def/lambda escapes
+            if dump.startswith("Name("):
+                name = dump.split("'")[1]
+                if name in captured or name in returned_names:
+                    continue
+            out.append(ctx.finding(
+                lineno, self.code,
+                f"connector key from {'/'.join(sorted(ops))} never "
+                f"released in '{scope_name}' (add release()/"
+                f"read_and_release() or hand the key to an owner)"))
+        return out
+
+    @staticmethod
+    def _channel_op(node: ast.AST
+                    ) -> Optional[Tuple[str, str, ast.Call]]:
+        if not isinstance(node, ast.Call):
+            return None
+        fn = node.func
+        if not isinstance(fn, ast.Attribute):
+            return None
+        if fn.attr not in _OPENERS | _CLOSERS:
+            return None
+        if not _looks_like_connector(fn.value):
+            return None
+        rname = (fn.value.id if isinstance(fn.value, ast.Name)
+                 else fn.value.attr)
+        return fn.attr, rname, node

@@ -1,0 +1,567 @@
+"""Lock rules: CCY001 (discipline), CCY002 (order), CCY003 (blocking).
+
+All three share one corpus-wide "lock pass" that builds a model of every
+class: which attributes are locks (``threading.Lock/RLock/Condition``,
+with ``Condition(self._lock)`` treated as an alias of ``_lock``), which
+fields are annotated, and which methods assume a lock is already held.
+
+Annotation convention (trailing comments, checked — not just docs):
+
+  ``self._order = []          # guarded-by: _lock``
+      every load and store of ``self._order`` must happen inside
+      ``with self._lock`` (or inside a ``# requires-lock: _lock``
+      method).  Read-modify-writes of the field through another object
+      (``obj._order += ...``) are flagged wherever they appear.
+
+  ``self._free = []           # guarded-by-writes: _lock``
+      writes-only mode for the PageAllocator pattern: mutation needs the
+      lock, but lock-free advisory reads are a documented contract.
+
+  ``def _evict_one(self):  # requires-lock: _lock``
+      the body runs with ``_lock`` held; callers must hold it, and the
+      analyzer checks every ``self._evict_one()`` call site.
+
+CCY001 checks field access against those annotations.  CCY002 builds a
+static acquisition graph (``with`` nesting plus one level of intra-class
+call resolution) and flags cycles and re-entry on non-reentrant
+``threading.Lock``.  CCY003 flags calls that can block indefinitely
+while a lock is held: ``time.sleep``, ``.join()``, queue ``put/get``,
+connector ``recv/send``, engine ``step()`` / prefix extraction — the
+"no lock held during KV extraction" warm-seed rule, machine-checked.
+``Condition.wait`` on the held lock's own condition is exempt.
+
+Known limits (by design — this is a lint, not a prover): lock tracking
+is lexical and per-class; cross-object acquisition chains and locks
+passed as arguments are not modeled.  Nested ``def``s are analyzed with
+an empty held-set (they usually run later, on another thread); lambdas
+inherit the enclosing held-set (they usually run inline).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analyze.framework import (Corpus, FileContext, Finding, Rule,
+                                     register)
+
+_GUARDED_RE = re.compile(r"#\s*guarded-by(?P<w>-writes)?:\s*(?P<lock>\w+)")
+_REQUIRES_RE = re.compile(r"#\s*requires-lock:\s*(?P<lock>\w+)")
+
+_LOCK_CTORS = {"Lock": "Lock", "RLock": "RLock", "Condition": "Condition"}
+
+# list/dict/set methods that mutate their receiver: an annotated field
+# used as the receiver of one of these counts as a write
+_MUTATORS = {"append", "extend", "insert", "remove", "pop", "popitem",
+             "clear", "update", "setdefault", "add", "discard",
+             "appendleft", "move_to_end"}
+
+_QUEUEISH_RE = re.compile(
+    r"(^|_)(q|queue|queues|inbox|outbox|completions|replies|cmd|evt|"
+    r"events)s?$")
+
+
+def _receiver_name(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _looks_like_connector(node: ast.expr) -> bool:
+    name = _receiver_name(node)
+    return name is not None and "conn" in name.lower()
+
+
+def _is_self_attr(node: ast.expr) -> Optional[str]:
+    """``self.X`` -> ``X``, else None."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+# ---------------------------------------------------------------------------
+# class models
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ClassModel:
+    name: str
+    rel: str
+    bases: List[str] = field(default_factory=list)
+    lock_kinds: Dict[str, str] = field(default_factory=dict)
+    aliases: Dict[str, str] = field(default_factory=dict)
+    # field -> (lock attr, writes_only)
+    guarded: Dict[str, Tuple[str, bool]] = field(default_factory=dict)
+    requires: Dict[str, str] = field(default_factory=dict)
+    methods: Dict[str, ast.AST] = field(default_factory=dict)
+
+    def canon(self, attr: str) -> str:
+        return self.aliases.get(attr, attr)
+
+    def lock_of(self, node: ast.expr) -> Optional[str]:
+        """Canonical lock attr when ``node`` is ``self.<lock>``."""
+        attr = _is_self_attr(node)
+        if attr is not None and attr in self.lock_kinds:
+            return self.canon(attr)
+        return None
+
+
+_EMPTY = ClassModel(name="<module>", rel="")
+
+
+def _base_names(node: ast.ClassDef) -> List[str]:
+    out = []
+    for b in node.bases:
+        if isinstance(b, ast.Name):
+            out.append(b.id)
+        elif isinstance(b, ast.Attribute):
+            out.append(b.attr)
+    return out
+
+
+def _build_class(ctx: FileContext, node: ast.ClassDef) -> ClassModel:
+    cm = ClassModel(name=node.name, rel=ctx.rel, bases=_base_names(node))
+    for item in node.body:
+        if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        cm.methods[item.name] = item
+        # `# requires-lock: X` anywhere in the def signature lines
+        sig_end = item.body[0].lineno if item.body else item.lineno
+        for ln in range(item.lineno, sig_end + 1):
+            m = _REQUIRES_RE.search(ctx.line_text(ln))
+            if m:
+                cm.requires[item.name] = m.group("lock")
+                break
+        for sub in ast.walk(item):
+            if isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                targets = (sub.targets if isinstance(sub, ast.Assign)
+                           else [sub.target])
+                attrs = [a for a in map(_is_self_attr, targets)
+                         if a is not None]
+                if not attrs:
+                    continue
+                value = sub.value
+                # lock constructors and Condition(self._lock) aliases
+                if isinstance(value, ast.Call):
+                    fn = value.func
+                    ctor = None
+                    if isinstance(fn, ast.Attribute):
+                        ctor = _LOCK_CTORS.get(fn.attr)
+                    elif isinstance(fn, ast.Name):
+                        ctor = _LOCK_CTORS.get(fn.id)
+                    if ctor:
+                        for a in attrs:
+                            cm.lock_kinds[a] = ctor
+                        if ctor == "Condition" and value.args:
+                            target = _is_self_attr(value.args[0])
+                            if target is not None:
+                                for a in attrs:
+                                    cm.aliases[a] = target
+                # the annotation may trail any line of the statement, or
+                # sit in the contiguous comment block directly above it
+                cand = list(range(sub.lineno,
+                                  (sub.end_lineno or sub.lineno) + 1))
+                ln = sub.lineno - 1
+                while ln >= 1 and ctx.line_text(ln).strip().startswith("#"):
+                    cand.insert(0, ln)
+                    ln -= 1
+                for ln in cand:
+                    m = _GUARDED_RE.search(ctx.line_text(ln))
+                    if m:
+                        spec = (m.group("lock"), m.group("w") is not None)
+                        for a in attrs:
+                            cm.guarded[a] = spec
+                        break
+    return cm
+
+
+def _resolve(registry: Dict[str, ClassModel], name: str,
+             seen: Optional[Set[str]] = None) -> ClassModel:
+    """Merge a class with its (corpus-known) bases, subclass winning."""
+    seen = seen or set()
+    cm = registry[name]
+    if not cm.bases or name in seen:
+        return cm
+    seen.add(name)
+    merged = ClassModel(name=cm.name, rel=cm.rel, bases=cm.bases)
+    for b in cm.bases:
+        if b in registry and b not in seen:
+            base = _resolve(registry, b, seen)
+            merged.lock_kinds.update(base.lock_kinds)
+            merged.aliases.update(base.aliases)
+            merged.guarded.update(base.guarded)
+            merged.requires.update(base.requires)
+    merged.lock_kinds.update(cm.lock_kinds)
+    merged.aliases.update(cm.aliases)
+    merged.guarded.update(cm.guarded)
+    merged.requires.update(cm.requires)
+    merged.methods = cm.methods
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# per-method write classification
+# ---------------------------------------------------------------------------
+
+def _mark_target(t: ast.expr, writes: Set[int]) -> None:
+    if isinstance(t, ast.Attribute):
+        writes.add(id(t))
+    elif isinstance(t, ast.Subscript):
+        if isinstance(t.value, ast.Attribute):
+            writes.add(id(t.value))        # self._owned[k] = v
+    elif isinstance(t, (ast.Tuple, ast.List)):
+        for e in t.elts:
+            _mark_target(e, writes)
+    elif isinstance(t, ast.Starred):
+        _mark_target(t.value, writes)
+
+
+def _classify_writes(fn: ast.AST) -> Tuple[Set[int], Set[int]]:
+    """(write_ids, rmw_ids): Attribute node ids that are written, and
+    the subset that are read-modify-writes (AugAssign / mutator call)."""
+    writes: Set[int] = set()
+    rmw: Set[int] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                _mark_target(t, writes)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            _mark_target(node.target, writes)
+        elif isinstance(node, ast.AugAssign):
+            _mark_target(node.target, writes)
+            _mark_target(node.target, rmw)
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                _mark_target(t, writes)
+                _mark_target(t, rmw)
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr in _MUTATORS
+              and isinstance(node.func.value, ast.Attribute)):
+            writes.add(id(node.func.value))
+            rmw.add(id(node.func.value))
+    return writes, rmw
+
+
+# ---------------------------------------------------------------------------
+# the lock pass
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Edge:
+    src: Tuple[str, str]               # (class, lock)
+    dst: Tuple[str, str]
+    rel: str
+    line: int
+    dst_kind: str
+
+
+class _LockPass:
+    def __init__(self, corpus: Corpus):
+        self.corpus = corpus
+        self.registry: Dict[str, ClassModel] = {}
+        # field name -> lock spec, for fields guarded in exactly one class
+        self.unique_guarded: Dict[str, str] = {}
+        self.findings: Dict[str, List[Finding]] = {}   # rel -> findings
+        self.edges: List[_Edge] = []
+        self._acq_memo: Dict[Tuple[str, str], Set[str]] = {}
+
+    def emit(self, ctx: FileContext, lineno: int, code: str,
+             msg: str) -> None:
+        self.findings.setdefault(ctx.rel, []).append(
+            ctx.finding(lineno, code, msg))
+
+    # -- phase 1: collect ------------------------------------------------
+    def collect(self) -> None:
+        for ctx in self.corpus.contexts:
+            if ctx.tree is None:
+                continue
+            for node in ctx.tree.body:
+                if isinstance(node, ast.ClassDef):
+                    self.registry[node.name] = _build_class(ctx, node)
+        owners: Dict[str, Set[str]] = {}
+        for cm in self.registry.values():
+            for f in cm.guarded:
+                owners.setdefault(f, set()).add(cm.name)
+        for f, who in owners.items():
+            if len(who) == 1:
+                cls = self.registry[next(iter(who))]
+                self.unique_guarded[f] = (
+                    f"{cls.name}.{cls.guarded[f][0]}")
+
+    # -- phase 2: walk ---------------------------------------------------
+    def run(self) -> None:
+        self.collect()
+        for ctx in self.corpus.contexts:
+            if ctx.tree is None:
+                continue
+            for node in ctx.tree.body:
+                if isinstance(node, ast.ClassDef):
+                    cls = _resolve(self.registry, node.name)
+                    for m in node.body:
+                        if isinstance(m, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                            self._walk_method(ctx, cls, m)
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    self._walk_method(ctx, _EMPTY, node)
+                else:
+                    writes, rmw = _classify_writes(node)
+                    self._walk(ctx, _EMPTY, "<module>", node,
+                               frozenset(), writes, rmw)
+        self._cycles()
+
+    def _acquired(self, cls: ClassModel, mname: str,
+                  stack: Optional[Set[str]] = None) -> Set[str]:
+        """Canonical locks a method may acquire (with + self-calls)."""
+        key = (cls.name, mname)
+        if key in self._acq_memo:
+            return self._acq_memo[key]
+        stack = stack or set()
+        if mname in stack or mname not in cls.methods:
+            return set()
+        stack.add(mname)
+        out: Set[str] = set()
+        for node in ast.walk(cls.methods[mname]):
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    lk = cls.lock_of(item.context_expr)
+                    if lk is not None:
+                        out.add(lk)
+            elif isinstance(node, ast.Call):
+                callee = _is_self_attr(node.func)
+                if callee is not None and callee in cls.methods:
+                    out |= self._acquired(cls, callee, stack)
+        self._acq_memo[key] = out
+        return out
+
+    def _walk_method(self, ctx: FileContext, cls: ClassModel,
+                     fn: ast.AST) -> None:
+        writes, rmw = _classify_writes(fn)
+        held = frozenset()
+        req = cls.requires.get(fn.name)
+        if req is not None:
+            held = frozenset({cls.canon(req)})
+        in_init = fn.name in ("__init__", "__post_init__")
+        for stmt in fn.body:
+            self._walk(ctx, cls, fn.name, stmt, held, writes, rmw,
+                       in_init=in_init)
+
+    def _walk(self, ctx: FileContext, cls: ClassModel, mname: str,
+              node: ast.AST, held: frozenset, writes: Set[int],
+              rmw: Set[int], in_init: bool = False) -> None:
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            new_held = set(held)
+            for item in node.items:
+                self._walk(ctx, cls, mname, item.context_expr, held,
+                           writes, rmw, in_init)
+                lk = cls.lock_of(item.context_expr)
+                if lk is None:
+                    continue
+                for h in held:
+                    self.edges.append(_Edge(
+                        (cls.name, h), (cls.name, lk), ctx.rel,
+                        item.context_expr.lineno,
+                        cls.lock_kinds.get(lk, "Lock")))
+                new_held.add(lk)
+            for stmt in node.body:
+                self._walk(ctx, cls, mname, stmt, frozenset(new_held),
+                           writes, rmw, in_init)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def: may run later on another thread; it cannot
+            # assume the enclosing held-set
+            for stmt in node.body:
+                self._walk(ctx, cls, mname, stmt, frozenset(), writes,
+                           rmw, in_init)
+            return
+        if isinstance(node, ast.Lambda):
+            # lambdas (sort keys, cheap callbacks) usually run inline
+            self._walk(ctx, cls, mname, node.body, held, writes, rmw,
+                       in_init)
+            return
+        if isinstance(node, ast.Call):
+            self._check_call(ctx, cls, mname, node, held, in_init)
+        elif isinstance(node, ast.Attribute):
+            self._check_attr(ctx, cls, mname, node, held, writes, rmw,
+                             in_init)
+        for child in ast.iter_child_nodes(node):
+            self._walk(ctx, cls, mname, child, held, writes, rmw,
+                       in_init)
+
+    # -- CCY001: field discipline ---------------------------------------
+    def _check_attr(self, ctx: FileContext, cls: ClassModel, mname: str,
+                    node: ast.Attribute, held: frozenset,
+                    writes: Set[int], rmw: Set[int],
+                    in_init: bool) -> None:
+        is_write = (id(node) in writes
+                    or isinstance(node.ctx, (ast.Store, ast.Del)))
+        attr = _is_self_attr(node)
+        if attr is not None:
+            spec = cls.guarded.get(attr)
+            if spec is None or in_init:
+                return
+            lock, writes_only = spec
+            if writes_only and not is_write:
+                return
+            if cls.canon(lock) not in held:
+                kind = "write to" if is_write else "read of"
+                self.emit(ctx, node.lineno, "CCY001",
+                          f"{kind} '{attr}' (guarded-by: {lock}) "
+                          f"outside 'with self.{lock}'")
+            return
+        # cross-object read-modify-write of a uniquely-guarded field
+        if (id(node) in rmw and node.attr in self.unique_guarded
+                and not isinstance(node.value, ast.Name)):
+            owner = self.unique_guarded[node.attr]
+            self.emit(ctx, node.lineno, "CCY001",
+                      f"read-modify-write of '{node.attr}' (guarded by "
+                      f"{owner}) through another object; use a locked "
+                      f"method on the owner")
+
+    # -- CCY003 + requires-lock call sites -------------------------------
+    def _check_call(self, ctx: FileContext, cls: ClassModel, mname: str,
+                    node: ast.Call, held: frozenset,
+                    in_init: bool) -> None:
+        callee = _is_self_attr(node.func)
+        if callee is not None:
+            req = cls.requires.get(callee)
+            if req is not None and not in_init:
+                if cls.canon(req) not in held:
+                    self.emit(ctx, node.lineno, "CCY001",
+                              f"call to '{callee}()' (requires-lock: "
+                              f"{req}) without holding self.{req}")
+            if held:
+                for lk in self._acquired(cls, callee):
+                    for h in held:
+                        self.edges.append(_Edge(
+                            (cls.name, h), (cls.name, lk), ctx.rel,
+                            node.lineno,
+                            cls.lock_kinds.get(lk, "Lock")))
+        if held:
+            what = self._blocking(cls, node, held)
+            if what is not None:
+                locks = ", ".join(sorted(held))
+                self.emit(ctx, node.lineno, "CCY003",
+                          f"blocking call {what} while holding "
+                          f"'{locks}'")
+
+    def _blocking(self, cls: ClassModel, node: ast.Call,
+                  held: frozenset) -> Optional[str]:
+        fn = node.func
+        if not isinstance(fn, ast.Attribute):
+            return None
+        attr = fn.attr
+        recv = fn.value
+        rname = _receiver_name(recv)
+        kwargs = {kw.arg for kw in node.keywords}
+        if attr == "sleep" and rname == "time":
+            return "time.sleep()"
+        if attr == "join":
+            if isinstance(recv, (ast.Constant, ast.JoinedStr)):
+                return None                # ", ".join(...)
+            if rname in ("os", "path", "posixpath", "ntpath"):
+                return None
+            return f"{rname or '?'}.join()"
+        if attr == "put":
+            return f"queue {rname or '?'}.put()"
+        if attr == "get":
+            if ({"timeout", "block"} & kwargs
+                    or (rname and _QUEUEISH_RE.search(rname))):
+                return f"queue {rname or '?'}.get()"
+            return None
+        if attr in ("recv", "send") and _looks_like_connector(recv):
+            return f"connector {rname}.{attr}()"
+        if attr in ("step", "prefix_snapshot", "seed_prefixes"):
+            return f"engine {rname or '?'}.{attr}()"
+        if attr == "wait":
+            lk = cls.lock_of(recv)
+            if lk is not None and lk in held:
+                return None                # Condition.wait on held lock
+            return f"{rname or '?'}.wait()"
+        return None
+
+    # -- CCY002: cycles over the acquisition graph -----------------------
+    def _cycles(self) -> None:
+        ctx_by_rel = {c.rel: c for c in self.corpus.contexts}
+        adj: Dict[Tuple[str, str], Set[Tuple[str, str]]] = {}
+        for e in self.edges:
+            if e.src != e.dst:
+                adj.setdefault(e.src, set()).add(e.dst)
+
+        def reaches(a, b, seen) -> bool:
+            if a == b:
+                return True
+            seen.add(a)
+            return any(n not in seen and reaches(n, b, seen)
+                       for n in adj.get(a, ()))
+
+        reported: Set[Tuple[str, int, str]] = set()
+        for e in self.edges:
+            ctx = ctx_by_rel.get(e.rel)
+            if ctx is None:
+                continue
+            if e.src == e.dst:
+                if e.dst_kind == "Lock":
+                    key = (e.rel, e.line, "self")
+                    if key not in reported:
+                        reported.add(key)
+                        self.emit(ctx, e.line, "CCY002",
+                                  f"re-acquires non-reentrant lock "
+                                  f"'{e.dst[1]}' already held "
+                                  f"(self-deadlock in {e.src[0]})")
+                continue
+            if reaches(e.dst, e.src, set()):
+                key = (e.rel, e.line, "cycle")
+                if key not in reported:
+                    reported.add(key)
+                    self.emit(ctx, e.line, "CCY002",
+                              f"lock-order cycle: acquires "
+                              f"'{e.dst[1]}' while holding "
+                              f"'{e.src[1]}' but the reverse order "
+                              f"also exists in {e.src[0]}")
+
+
+def lock_pass(corpus: Corpus) -> _LockPass:
+    lp = corpus.cache.get("lock_pass")
+    if lp is None:
+        lp = _LockPass(corpus)
+        lp.run()
+        corpus.cache["lock_pass"] = lp
+    return lp
+
+
+class _LockRule(Rule):
+    def check(self, ctx: FileContext, corpus: Corpus) -> List[Finding]:
+        lp = lock_pass(corpus)
+        return [f for f in lp.findings.get(ctx.rel, [])
+                if f.code == self.code]
+
+
+@register
+class LockDiscipline(_LockRule):
+    code = "CCY001"
+    name = "lock-discipline"
+    summary = ("access to a '# guarded-by:' field outside its lock, or a "
+               "'# requires-lock:' method called without it")
+
+
+@register
+class LockOrder(_LockRule):
+    code = "CCY002"
+    name = "lock-order"
+    summary = ("cycle in the static lock-acquisition graph, or re-entry "
+               "on a non-reentrant threading.Lock")
+
+
+@register
+class BlockingUnderLock(_LockRule):
+    code = "CCY003"
+    name = "blocking-call-under-lock"
+    summary = ("queue put/get, join, sleep, connector recv/send, or "
+               "engine step while holding a lock")

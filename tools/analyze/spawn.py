@@ -1,0 +1,160 @@
+"""PKL001 — spawn-safety for process-isolated stages.
+
+``isolation="process"`` replicas are built in a spawned child from an
+``EngineSpec`` whose ``target`` must name a module-level callable as a
+``"module:callable"`` string — lambdas, closures, and function-local
+defs cannot cross the pickle boundary (``core/config.py`` enforces the
+string shape at runtime; this rule catches it at lint time, plus the
+cases runtime validation cannot see until the child dies).
+
+Flagged:
+
+  - ``EngineSpec(lambda: ...)`` or ``EngineSpec(target=lambda: ...)``
+  - ``EngineSpec("no_colon_here")`` — malformed target string
+  - ``EngineSpec(local_fn)`` where ``local_fn`` is defined inside the
+    enclosing function (a closure)
+  - ``engine_factory=<lambda or local def>`` in any call that also
+    passes ``isolation="process"`` (thread replicas may use closures;
+    process replicas may not)
+  - lambda values inside an ``engine_factories={...}`` /
+    ``engine_specs={...}`` dict in an ``isolation="process"`` call
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from tools.analyze.framework import (Corpus, FileContext, Finding, Rule,
+                                     register)
+from tools.analyze.lifetime import _is_raises_with
+
+
+def _callee_name(fn: ast.expr) -> Optional[str]:
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def _is_process_isolated(call: ast.Call) -> bool:
+    for kw in call.keywords:
+        if (kw.arg == "isolation" and isinstance(kw.value, ast.Constant)
+                and kw.value.value == "process"):
+            return True
+    return False
+
+
+@register
+class SpawnSafety(Rule):
+    code = "PKL001"
+    name = "spawn-safety"
+    summary = ("lambda/closure/local used as an EngineSpec target or as "
+               "engine_factory for an isolation=\"process\" stage")
+
+    def check(self, ctx: FileContext, corpus: Corpus) -> List[Finding]:
+        out: List[Finding] = []
+        if ctx.tree is None:
+            return out
+        # names def'd inside each function scope (closure detection)
+        local_defs: Dict[int, Set[str]] = {}
+        parents: Dict[int, int] = {}
+
+        def index(node: ast.AST, scope: Optional[ast.AST]) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    if scope is not None:
+                        local_defs.setdefault(id(scope),
+                                              set()).add(child.name)
+                    index(child, child)
+                else:
+                    index(child, scope)
+                if scope is not None:
+                    parents[id(child)] = id(scope)
+
+        index(ctx.tree, None)
+
+        # negative tests build deliberately-bad specs under pytest.raises
+        exempt: Set[int] = set()
+        for node in ast.walk(ctx.tree):
+            if _is_raises_with(node):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Call):
+                        exempt.add(id(sub))
+
+        def enclosing_locals(call: ast.Call) -> Set[str]:
+            names: Set[str] = set()
+            sid = parents.get(id(call))
+            while sid is not None:
+                names |= local_defs.get(sid, set())
+                sid = None          # one level is enough for the repo
+            return names
+
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) or id(node) in exempt:
+                continue
+            name = _callee_name(node.func)
+            if name == "EngineSpec":
+                out.extend(self._check_spec(ctx, node,
+                                            enclosing_locals(node)))
+            if _is_process_isolated(node):
+                out.extend(self._check_process_call(
+                    ctx, node, enclosing_locals(node)))
+        return out
+
+    def _check_spec(self, ctx: FileContext, call: ast.Call,
+                    local_names: Set[str]) -> List[Finding]:
+        target: Optional[ast.expr] = call.args[0] if call.args else None
+        if target is None:
+            for kw in call.keywords:
+                if kw.arg == "target":
+                    target = kw.value
+        if target is None:
+            return []
+        if isinstance(target, ast.Lambda):
+            return [ctx.finding(
+                target.lineno, self.code,
+                "EngineSpec target is a lambda; spawn targets must be "
+                "module-level 'module:callable' strings")]
+        if isinstance(target, ast.Constant) and isinstance(target.value,
+                                                           str):
+            if ":" not in target.value:
+                return [ctx.finding(
+                    target.lineno, self.code,
+                    f"malformed EngineSpec target {target.value!r}; "
+                    f"expected 'module:callable'")]
+            return []
+        if isinstance(target, ast.Name) and target.id in local_names:
+            return [ctx.finding(
+                target.lineno, self.code,
+                f"EngineSpec target '{target.id}' is defined inside the "
+                f"enclosing function; a spawned child cannot import a "
+                f"closure")]
+        return []
+
+    def _check_process_call(self, ctx: FileContext, call: ast.Call,
+                            local_names: Set[str]) -> List[Finding]:
+        out: List[Finding] = []
+
+        def bad_value(v: ast.expr, what: str) -> None:
+            if isinstance(v, ast.Lambda):
+                out.append(ctx.finding(
+                    v.lineno, self.code,
+                    f"{what} is a lambda but isolation=\"process\" "
+                    f"requires a picklable EngineSpec"))
+            elif isinstance(v, ast.Name) and v.id in local_names:
+                out.append(ctx.finding(
+                    v.lineno, self.code,
+                    f"{what} '{v.id}' is a function-local closure but "
+                    f"isolation=\"process\" requires a picklable "
+                    f"EngineSpec"))
+
+        for kw in call.keywords:
+            if kw.arg == "engine_factory":
+                bad_value(kw.value, "engine_factory")
+            elif (kw.arg in ("engine_factories", "engine_specs")
+                  and isinstance(kw.value, ast.Dict)):
+                for v in kw.value.values:
+                    bad_value(v, f"{kw.arg} value")
+        return out

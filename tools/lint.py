@@ -15,16 +15,12 @@ rely on repo-wide:
 Both paths lint the same tree and exit non-zero on any finding, so
 ``make check`` behaves identically with or without ruff.
 
-On top of either path, a repo-specific deprecation scan ALWAYS runs
-(ruff cannot know about these):
-
-  * DEP001 — connector ``put()/get()/delete()`` trio (use the channel
-    API: ``send()/recv()/release()``),
-  * DEP002 — the ``Orchestrator(replicas=..., routing=..., ...)``
-    kwargs bag (build a ``ServeConfig`` and pass ``config=...``).
-
-A ``# noqa`` on the offending line opts out (the shim tests do this
-deliberately).
+The repo-specific rules that used to live here (DEP001/DEP002) moved to
+the invariant analyzer — ``python -m tools.analyze`` / ``make analyze``
+— alongside the concurrency and lifetime rules.  Suppression is
+code-aware and shared with that framework: ``# noqa: F401`` silences
+exactly F401 (a bare ``# noqa`` still silences everything; a marker
+naming only other codes no longer does).
 
   python tools/lint.py [paths...]
 """
@@ -43,6 +39,12 @@ RUFF_ARGS = ["check", "--select", "E501,F401,F63,F7,F82,W191,W291,W292,W293",
              "--line-length", str(MAX_LINE)]
 DEFAULT_PATHS = ["src", "tests", "benchmarks", "tools", "examples"]
 REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# the shared noqa parser lives in the analyzer framework; bootstrap the
+# import so `python tools/lint.py` works from anywhere
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+from tools.analyze.framework import is_suppressed  # noqa: E402
 
 
 def iter_py(paths: List[str]) -> Iterator[pathlib.Path]:
@@ -93,57 +95,6 @@ def _used_names(tree: ast.Module) -> set:
     return used
 
 
-# deprecated surfaces (see src/repro/connector/base.py and
-# src/repro/core/orchestrator.py): keep in lockstep with the runtime
-# DeprecationWarnings so the lint gate and the warnings retire together
-_DEP_CONNECTOR_TRIO = {"put", "get", "delete"}
-_DEP_ORCH_KWARGS = {"queue_capacity", "recv_timeout", "replicas", "routing",
-                    "engine_factories", "engine_specs", "isolation",
-                    "warm_seed"}          # bare backend= predates the bag
-
-
-def _looks_like_connector(node: ast.expr) -> bool:
-    """Receiver heuristic for DEP001: a name (or attribute) that says
-    it holds a connector — ``conn``, ``connector``, ``seed_connector``.
-    Keeps dict ``.get()`` / set ``.delete()`` lookalikes out."""
-    name = None
-    if isinstance(node, ast.Name):
-        name = node.id
-    elif isinstance(node, ast.Attribute):
-        name = node.attr
-    return name is not None and "conn" in name.lower()
-
-
-def scan_deprecated(path: pathlib.Path, tree: ast.Module,
-                    lines: List[str]) -> List[str]:
-    rel = path.relative_to(REPO)
-    errors: List[str] = []
-
-    def flagged(lineno: int) -> bool:
-        return "noqa" in lines[lineno - 1]
-
-    for node in ast.walk(tree):
-        if not isinstance(node, ast.Call):
-            continue
-        fn = node.func
-        if (isinstance(fn, ast.Attribute) and fn.attr in _DEP_CONNECTOR_TRIO
-                and _looks_like_connector(fn.value)
-                and not flagged(node.lineno)):
-            errors.append(
-                f"{rel}:{node.lineno}: DEP001 connector .{fn.attr}() is "
-                f"deprecated; use the channel API "
-                f"(send()/recv()/release())")
-        if (isinstance(fn, ast.Name) and fn.id == "Orchestrator"):
-            for kw in node.keywords:
-                if (kw.arg in _DEP_ORCH_KWARGS
-                        and not flagged(kw.value.lineno)):
-                    errors.append(
-                        f"{rel}:{kw.value.lineno}: DEP002 Orchestrator "
-                        f"kwargs bag ({kw.arg}=...) is deprecated; pass "
-                        f"config=ServeConfig(...)")
-    return errors
-
-
 def lint_file(path: pathlib.Path) -> List[str]:
     rel = path.relative_to(REPO)
     text = path.read_text()
@@ -168,32 +119,17 @@ def lint_file(path: pathlib.Path) -> List[str]:
         errors.append(f"{rel}:{len(lines)}: W391 blank line at end of file")
 
     # F401: unused imports.  __init__.py re-exports are conventional;
-    # a `# noqa` on the import line opts out explicitly.
+    # a `# noqa: F401` on the import line opts out explicitly.
     if path.name != "__init__.py":
         used = _used_names(tree)
         for lineno, bound, display in _imported_names(tree):
             if bound in used or bound == "_":
                 continue
-            if "noqa" in lines[lineno - 1]:
+            if is_suppressed("F401", lines[lineno - 1]):
                 continue
             errors.append(f"{rel}:{lineno}: F401 '{display}' imported "
                           "but unused")
-    errors.extend(scan_deprecated(path, tree, lines))
     return errors
-
-
-def deprecation_findings(paths: List[str]) -> List[str]:
-    """The DEP scan alone — run alongside ruff, which can't know about
-    repo-local deprecations (the fallback path folds it into lint_file)."""
-    out: List[str] = []
-    for f in iter_py(paths):
-        text = f.read_text()
-        try:
-            tree = ast.parse(text, filename=str(f))
-        except SyntaxError:
-            continue                      # ruff reports the syntax error
-        out.extend(scan_deprecated(f, tree, text.split("\n")))
-    return out
 
 
 def main(argv: List[str]) -> int:
@@ -201,13 +137,7 @@ def main(argv: List[str]) -> int:
     ruff = shutil.which("ruff")
     if ruff:
         targets = [str(REPO / p) for p in paths if (REPO / p).exists()]
-        rc = subprocess.call([ruff, *RUFF_ARGS, *targets])
-        dep = deprecation_findings(paths)
-        for e in dep:
-            print(e)
-        if dep:
-            print(f"lint: {len(dep)} deprecation finding(s)")
-        return 1 if (rc or dep) else 0
+        return 1 if subprocess.call([ruff, *RUFF_ARGS, *targets]) else 0
     errors: List[str] = []
     n = 0
     for f in iter_py(paths):
